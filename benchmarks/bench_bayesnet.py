@@ -1,0 +1,82 @@
+"""Paper Table IV — single-marginal runtime on the BN-repository workloads.
+
+Columns reproduced (structure-matched synthetic replicas — the original
+BN-repo CPTs are not downloadable offline, see DESIGN.md Sec. 7):
+
+  exact VE      — the "Dice"-style exact-inference baseline;
+  gibbs_cdf     — software CDF sampling (the CPU/PULP-style baseline);
+  gibbs_lut_ky  — AIA pipeline (LUT-exp + rejection-KY), ours.
+
+Accuracy is reported as max TVD vs the exact marginals where VE is
+tractable within the budget."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import csv_row, timeit
+from repro.core import bayesnet as bnet
+from repro.core.exact import ve_marginal
+from repro.core.graphs import bn_repository_replica
+
+WORKLOADS = ["survey", "cancer", "alarm", "insurance", "water",
+             "hailfinder", "hepar2", "pigs"]
+VE_BUDGET_S = 30.0
+
+
+def run(quick: bool = False):
+    rows = []
+    workloads = WORKLOADS[:4] if quick else WORKLOADS
+    iters = 150 if quick else 300
+    for name in workloads:
+        bn = bn_repository_replica(name)
+        cbn = bnet.compile_bayesnet(bn)
+        q = bn.n_nodes // 2
+
+        # exact VE (Dice-analogue).  The dense/large replicas (hepar2, pigs)
+        # blow up VE memory — precisely the regime where the paper argues
+        # sampling wins; guard by moralized max clique size.
+        t0 = time.perf_counter()
+        exact = None
+        t_ve = float("nan")
+        max_mb = max(len(bn.markov_blanket(i)) for i in range(bn.n_nodes))
+        if bn.n_nodes <= 60 and max_mb <= 16:
+            try:
+                exact = ve_marginal(bn, q)
+                t_ve = time.perf_counter() - t0
+            except Exception:
+                pass
+            if time.perf_counter() - t0 > VE_BUDGET_S:
+                t_ve = float("nan")
+
+        marg = {}
+        times = {}
+        for sampler in ("lut_ky", "cdf"):
+            def call(s=sampler):
+                return bnet.run_gibbs(
+                    cbn, jax.random.key(0), n_chains=32, n_iters=iters,
+                    burn_in=iters // 4, sampler=s,
+                )[0]
+
+            times[sampler] = timeit(call, warmup=1, iters=3)
+            marg[sampler] = np.asarray(call())
+
+        tvd = float("nan")
+        if exact is not None:
+            tvd = 0.5 * np.abs(
+                marg["lut_ky"][q][: len(exact)] - exact
+            ).sum()
+        rows.append(csv_row(
+            f"table4_{name}", times["lut_ky"] * 1e6,
+            f"ve_ms={t_ve*1e3:.1f};gibbs_lutky_ms={times['lut_ky']*1e3:.1f};"
+            f"gibbs_cdf_ms={times['cdf']*1e3:.1f};"
+            f"nodes={bn.n_nodes};tvd_vs_exact={tvd:.4f}",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

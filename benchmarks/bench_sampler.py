@@ -1,0 +1,80 @@
+"""Paper Table II — sampler-unit comparison: rejection-KY vs CDF.
+
+The ASIC numbers (area um^2, pJ/sample) are circuit properties; the
+architecture-independent claims we reproduce are:
+
+  * throughput modes: lower precision => more samples per random-bit budget
+    (32b/16b/8b -> 1/2/4 samples per cycle in the paper; here: bits consumed
+    per sample halves as weight precision drops);
+  * KY beats CDF per-sample cost: O(H) bit-steps vs O(N) cumsum + search;
+  * measured CPU wall-clock for both pipelines (jit, batch=4096).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row, timeit
+from repro.core import ky as ky_core
+from repro.core.draws import draw_from_logits
+from repro.core.interp import build_exp_weight_lut
+
+B, N = 4096, 32
+
+
+def run(quick: bool = False):
+    rows = []
+    rng = np.random.default_rng(0)
+    weights = jnp.asarray(rng.integers(1, 200, (B, N)), jnp.int32)
+    logp = jnp.log(weights.astype(jnp.float32))
+    tab, spec = build_exp_weight_lut()
+
+    # --- precision modes (Table II "operating mode" columns) ---------------
+    # at precision p the distribution must be quantized so sum(m) <= 2^p:
+    # per-weight bits = p - ceil(log2 N), exactly the paper's packing trade
+    for prec, label in ((30, "32b"), (16, "16b"), (8, "8b")):
+        wq = ky_core.quantize_probs(
+            weights.astype(jnp.float32), bits=prec - 5 - 1
+        )
+        n_words = -(-prec * 8 // 32)
+        words = ky_core.random_words(jax.random.key(0), (B,), n_words)
+
+        def call(w=wq, wd=words, p=prec):
+            return ky_core.ky_sample_fast(w, wd, n_bins=N, precision=p)[0]
+
+        t = timeit(call)
+        _, stats = ky_core.ky_sample_fast(wq, words, n_bins=N,
+                                          precision=prec)
+        bits = float(stats["bits_used"].mean())
+        fb = float(stats["fallback"].mean())
+        rows.append(csv_row(
+            f"table2_ky_{label}", t / B * 1e6,
+            f"samples/s={B/t:.3e};bits/sample={bits:.2f};fallback={fb:.4f}",
+        ))
+
+    # --- CDF baseline (normalize + cumsum + inverse search) ----------------
+    def cdf_call():
+        return draw_from_logits(logp, jax.random.key(1), "cdf")
+
+    t_cdf = timeit(cdf_call)
+    rows.append(csv_row(
+        "table2_cdf_32b", t_cdf / B * 1e6, f"samples/s={B/t_cdf:.3e}"
+    ))
+
+    # --- full AIA pipeline (LUT-exp + KY) vs CDF --------------------------
+    def aia_call():
+        return draw_from_logits(logp, jax.random.key(2), "lut_ky",
+                                tab, spec)
+
+    t_aia = timeit(aia_call)
+    rows.append(csv_row(
+        "table2_lutky_pipeline", t_aia / B * 1e6,
+        f"samples/s={B/t_aia:.3e};speedup_vs_cdf={t_cdf/t_aia:.2f}x",
+    ))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

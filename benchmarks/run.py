@@ -1,0 +1,79 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  ``--quick`` trims budgets;
+``--roofline`` additionally summarizes the dry-run roofline table (requires
+benchmarks/results/dryrun/*.json from repro.launch.dryrun)."""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks import (bench_bayesnet, bench_breakdown, bench_coloring,
+                        bench_entropy, bench_interp, bench_mrf,
+                        bench_sampler, bench_token_sampler)
+
+SUITES = {
+    "sampler": bench_sampler.run,          # Table II
+    "interp": bench_interp.run,            # Table III
+    "bayesnet": bench_bayesnet.run,        # Table IV
+    "mrf": bench_mrf.run,                  # Fig. 12/13
+    "entropy": bench_entropy.run,          # Fig. 11
+    "coloring": bench_coloring.run,        # Fig. 9
+    "breakdown": bench_breakdown.run,      # Fig. 2a
+    "token_sampler": bench_token_sampler.run,  # beyond-paper (Table V ana.)
+}
+
+
+def roofline_summary():
+    d = os.path.join(os.path.dirname(os.path.abspath(__file__)), "results",
+                     "dryrun")
+    if not os.path.isdir(d):
+        print("# no dryrun results yet")
+        return
+    for f in sorted(os.listdir(d)):
+        if not f.endswith(".json"):
+            continue
+        r = json.load(open(os.path.join(d, f)))
+        if r.get("status") != "ok":
+            print(f"roofline_{r['arch']}_{r['cell']}_{r['mesh']},0.00,"
+                  f"status=skipped")
+            continue
+        rf = r["roofline"]
+        dom = max(("t_compute_s", "t_memory_s", "t_collective_s"),
+                  key=lambda k: rf[k])
+        print(f"roofline_{r['arch']}_{r['cell']}_{r['mesh']},"
+              f"{rf[dom]*1e6:.0f},"
+              f"bottleneck={rf['bottleneck']};"
+              f"tc={rf['t_compute_s']:.3f};tm={rf['t_memory_s']:.3f};"
+              f"tcoll={rf['t_collective_s']:.3f};"
+              f"useful={rf['useful_flops_ratio']:.3f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="")
+    ap.add_argument("--roofline", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    suites = {args.only: SUITES[args.only]} if args.only else SUITES
+    for name, fn in suites.items():
+        t0 = time.time()
+        print(f"# --- {name} ---", flush=True)
+        fn(quick=args.quick)
+        print(f"# {name} took {time.time()-t0:.1f}s", flush=True)
+    if args.roofline:
+        print("# --- roofline (from dry-run) ---")
+        roofline_summary()
+
+
+if __name__ == "__main__":
+    main()

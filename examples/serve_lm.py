@@ -1,0 +1,55 @@
+"""Batched LM serving with the paper's normalization-free KY token sampler.
+
+Prefills a batch of prompts, then decodes tokens with, per step:
+logits -> LUT-exp integer weights (C2) -> hierarchical rejection-KY (C1) —
+no softmax anywhere in the sampling path.  Compares against gumbel-max and
+greedy on the same checkpoint.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch musicgen-medium
+"""
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.serve import generate
+from repro.models import transformer as tfm
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="musicgen-medium")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    params = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = jax.numpy.asarray(
+        rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)), dtype="int32"
+    )
+    features = None
+    if cfg.frontend:
+        features = jax.numpy.asarray(rng.normal(
+            0, 1, (args.batch, cfg.frontend_len, tfm.FRONTEND_DIM)
+        ), dtype="float32")
+
+    for sampler in ("ky", "gumbel", "greedy"):
+        toks, times = generate(
+            cfg, params, prompts, args.gen, sampler=sampler,
+            features=features, key=jax.random.key(7),
+        )
+        tput = args.batch / np.mean(times[1:]) if len(times) > 1 else 0
+        uniq = len(np.unique(np.asarray(toks[:, args.prompt_len:])))
+        print(f"[serve_lm] {sampler:7s}: {tput:8.1f} tok/s, "
+              f"{uniq:4d} distinct generated tokens "
+              f"(batch {args.batch} x {args.gen})")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,258 @@
+"""Chromatic parallel Gibbs sampling for Bayes nets (paper Alg. 2 + Sec. IV).
+
+This is the software half of AIA: the "compiler" lowers an irregular DAG into
+dense, padded per-color update tensors (the analogue of mapping RVs onto the
+4x4 core mesh), and the jitted engine executes one color at a time:
+
+  compile time (numpy)                      run time (jit, per color)
+  ----------------------------------------  -------------------------------
+  moral graph -> DSATUR colors (C3)         gather CPT entries for all
+  per node: Markov-blanket factor list        (chain, node, factor, value)
+  factor -> (base, stride, scope) tensors     in one vectorized address calc
+  pad to (n_c, F, S) per color              logp -> LUT-exp weights (C2)
+                                            -> rejection-KY draw (C1)
+                                            -> scatter into the state vector
+
+The state-vector scatter/gather between colors is the paper's shared-RF
+exchange; on one chip it is a VMEM gather, across devices `distributed.py`
+turns it into an all-gather of the (tiny) value vector.
+
+All samplers are pluggable so the Fig. 12 ablations are first-class:
+  lut_ky   : LUT-exp int8 weights + rejection-KY      (AIA, C1+C2)
+  exact_ky : exact exp, 16-bit weights + rejection-KY (ablate C2)
+  cdf      : normalized softmax + inverse-CDF search  (PULP/CPU baseline)
+  gumbel   : Gumbel-max argmax                        (beyond-paper TPU-native)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import coloring as coloring_mod
+from repro.core import ky as ky_core
+from repro.core.draws import SAMPLERS, draw_from_logits
+from repro.core.graphs import DiscreteBayesNet
+from repro.core.interp import LUTSpec, build_exp_weight_lut
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass
+class ColorGroup:
+    nodes: jax.Array  # (n_c,) int32
+    cards: jax.Array  # (n_c,) int32
+    base: jax.Array  # (n_c, F) int32; 0 => padded factor slot (dummy entry)
+    stride: jax.Array  # (n_c, F, S) int32
+    scope_var: jax.Array  # (n_c, F, S) int32
+    is_self: jax.Array  # (n_c, F, S) bool
+
+
+@dataclasses.dataclass
+class CompiledBayesNet:
+    log_flat: jax.Array  # (T,) f32: [0.0] + concat(log cpts)
+    groups: list[ColorGroup]
+    cards: jax.Array  # (n,) int32
+    init_vals: jax.Array  # (n,) int32 (evidence baked in)
+    free_mask: jax.Array  # (n,) bool
+    max_card: int
+    n_nodes: int
+    colors: tuple[int, ...]  # hashable: this dataclass crosses jit boundaries
+    exp_table: jax.Array
+    exp_spec: LUTSpec
+    name: str = "bn"
+
+
+def compile_bayesnet(
+    bn: DiscreteBayesNet,
+    evidence: dict[int, int] | None = None,
+    lut_size: int = 16,
+    lut_range: float = 8.0,
+    lut_bits: int = 8,
+    seed: int = 0,
+) -> CompiledBayesNet:
+    """The AIA compiler chain (Fig. 8): coloring -> mapping -> code(gather) gen."""
+    bn.validate()
+    evidence = dict(evidence or {})
+    n = bn.n_nodes
+    colors = coloring_mod.dsatur(bn.moral_adjacency())
+    assert coloring_mod.verify_coloring(bn.moral_adjacency(), colors)
+
+    # flat log-CPT arena; entry 0 is the dummy used by padded factor slots
+    bases = np.zeros(n, np.int64)
+    tables = [np.zeros(1)]
+    off = 1
+    for i, cpt in enumerate(bn.cpts):
+        bases[i] = off
+        tables.append(np.log(cpt.reshape(-1)))
+        off += cpt.size
+    log_flat = jnp.asarray(np.concatenate(tables), jnp.float32)
+
+    def factor_slots(fnode: int):
+        """(base, stride-per-scope-var, scope vars) for CPT of `fnode`."""
+        scope = list(bn.parents[fnode]) + [fnode]
+        dims = [int(bn.cards[v]) for v in scope]
+        strides = np.ones(len(dims), np.int64)
+        for k in range(len(dims) - 2, -1, -1):
+            strides[k] = strides[k + 1] * dims[k + 1]
+        return bases[fnode], strides, scope
+
+    groups: list[ColorGroup] = []
+    for group_nodes in coloring_mod.color_groups(colors):
+        free = [v for v in group_nodes if v not in evidence]
+        if not free:
+            continue
+        factor_lists = [[i] + bn.children(i) for i in free]
+        f_max = max(len(fl) for fl in factor_lists)
+        s_max = max(
+            len(bn.parents[f]) + 1 for fl in factor_lists for f in fl
+        )
+        nc = len(free)
+        base = np.zeros((nc, f_max), np.int64)
+        stride = np.zeros((nc, f_max, s_max), np.int64)
+        scope_var = np.zeros((nc, f_max, s_max), np.int64)
+        is_self = np.zeros((nc, f_max, s_max), bool)
+        for a, (i, fl) in enumerate(zip(free, factor_lists)):
+            for b, f in enumerate(fl):
+                fb, fs, sc = factor_slots(f)
+                base[a, b] = fb
+                stride[a, b, : len(sc)] = fs
+                scope_var[a, b, : len(sc)] = sc
+                is_self[a, b, : len(sc)] = [v == i for v in sc]
+        groups.append(
+            ColorGroup(
+                nodes=jnp.asarray(free, jnp.int32),
+                cards=jnp.asarray([bn.cards[i] for i in free], jnp.int32),
+                base=jnp.asarray(base, jnp.int32),
+                stride=jnp.asarray(stride, jnp.int32),
+                scope_var=jnp.asarray(scope_var, jnp.int32),
+                is_self=jnp.asarray(is_self),
+            )
+        )
+
+    rng = np.random.default_rng(seed)
+    init = rng.integers(0, np.asarray(bn.cards), size=n)
+    free_mask = np.ones(n, bool)
+    for v, x in evidence.items():
+        init[v] = x
+        free_mask[v] = False
+
+    # integer-weight exp table (paper Sec. III-D: 16 entries, 8-bit values)
+    exp_table, exp_spec = build_exp_weight_lut(
+        bits=lut_bits, x_min=-lut_range, size=lut_size
+    )
+    return CompiledBayesNet(
+        log_flat=log_flat,
+        groups=groups,
+        cards=jnp.asarray(np.asarray(bn.cards), jnp.int32),
+        init_vals=jnp.asarray(init, jnp.int32),
+        free_mask=jnp.asarray(free_mask),
+        max_card=int(np.max(bn.cards)),
+        n_nodes=n,
+        colors=tuple(int(c) for c in colors),
+        exp_table=exp_table,
+        exp_spec=exp_spec,
+        name=bn.name,
+    )
+
+
+jax.tree_util.register_dataclass(
+    ColorGroup, ["nodes", "cards", "base", "stride", "scope_var", "is_self"], []
+)
+jax.tree_util.register_dataclass(
+    CompiledBayesNet,
+    ["log_flat", "groups", "cards", "init_vals", "free_mask", "exp_table"],
+    ["max_card", "n_nodes", "colors", "exp_spec", "name"],
+)
+
+
+def group_log_conditionals(
+    cbn: CompiledBayesNet, g: ColorGroup, vals: jax.Array
+) -> jax.Array:
+    """log P(X_i = v | MB(X_i)) up to a constant, for all chains and all
+    nodes of one color at once.  vals: (B, n) -> (B, n_c, V)."""
+    v_range = jnp.arange(cbn.max_card, dtype=jnp.int32)
+    sv = vals[:, g.scope_var]  # (B, n_c, F, S)
+    val_or_v = jnp.where(
+        g.is_self[None, ..., None], v_range, sv[..., None]
+    )  # (B, n_c, F, S, V)
+    addr = g.base[None, :, :, None] + jnp.sum(
+        g.stride[None, ..., None] * val_or_v, axis=-2
+    )  # (B, n_c, F, V)
+    logp = jnp.sum(cbn.log_flat[addr], axis=-2)  # (B, n_c, V)
+    return jnp.where(v_range < g.cards[None, :, None], logp, NEG_INF)
+
+
+
+
+def update_color_group(
+    cbn: CompiledBayesNet,
+    g: ColorGroup,
+    vals: jax.Array,
+    key: jax.Array,
+    sampler: str = "lut_ky",
+) -> jax.Array:
+    logp = group_log_conditionals(cbn, g, vals)
+    labels = draw_from_logits(logp, key, sampler, cbn.exp_table, cbn.exp_spec)
+    return vals.at[:, g.nodes].set(labels)
+
+
+def gibbs_sweep(
+    cbn: CompiledBayesNet, vals: jax.Array, key: jax.Array, sampler: str
+) -> jax.Array:
+    """One iteration of Alg. 2: loop over colors, parallel within a color."""
+    keys = jax.random.split(key, len(cbn.groups))
+    for g, k in zip(cbn.groups, keys):
+        vals = update_color_group(cbn, g, vals, k, sampler)
+    return vals
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_chains", "n_iters", "burn_in", "sampler")
+)
+def run_gibbs(
+    cbn: CompiledBayesNet,
+    key: jax.Array,
+    n_chains: int = 32,
+    n_iters: int = 200,
+    burn_in: int = 50,
+    sampler: str = "lut_ky",
+):
+    """Multi-chain chromatic Gibbs; returns (marginals (n, V), final vals).
+
+    Chains are the data-parallel axis (AIA's MaxChain loop, Alg. 1 line 1);
+    the single-marginal histogram accumulates over all chains and kept
+    iterations, giving every node's marginal at no extra cost (the paper's
+    "compute all single marginals without overhead" observation)."""
+    init = jnp.tile(cbn.init_vals[None], (n_chains, 1))
+    # randomize free nodes per chain
+    k0, key = jax.random.split(key)
+    rnd = jax.random.randint(
+        k0, (n_chains, cbn.n_nodes), 0, 1 << 30, jnp.int32
+    ) % jnp.maximum(cbn.cards[None], 1)
+    vals = jnp.where(cbn.free_mask[None], rnd, init)
+
+    hist0 = jnp.zeros((cbn.n_nodes, cbn.max_card), jnp.int32)
+
+    def body(t, carry):
+        vals, key, hist = carry
+        key, sub = jax.random.split(key)
+        vals = gibbs_sweep(cbn, vals, sub, sampler)
+        onehot = (
+            vals[..., None] == jnp.arange(cbn.max_card, dtype=jnp.int32)
+        ).astype(jnp.int32)
+        hist = hist + jnp.where(t >= burn_in, onehot.sum(0), 0)
+        return vals, key, hist
+
+    vals, _, hist = jax.lax.fori_loop(0, n_iters, body, (vals, key, hist0))
+    card_mask = (
+        jnp.arange(cbn.max_card, dtype=jnp.int32)[None] < cbn.cards[:, None]
+    )
+    denom = jnp.maximum(hist.sum(-1, keepdims=True), 1)
+    marginals = jnp.where(card_mask, hist / denom, 0.0)
+    return marginals, vals

@@ -1,0 +1,301 @@
+"""Distributed chromatic Gibbs via shard_map (paper Sec. III mesh, at pod scale).
+
+AIA's 4x4 core mesh becomes the JAX device mesh; the two data-movement
+mechanisms map 1:1 onto collectives:
+
+  * neighbor shared-RF access (C4)  ->  `lax.ppermute` halo exchange between
+    mesh-adjacent devices (MRF grids are row-partitioned over the "model"
+    axis; only boundary rows move, one ICI hop, contention-free);
+  * global barrier / event unit (C5) -> the implicit synchronization at each
+    collective boundary: one per color, exactly Alg. 2's schedule;
+  * shared-RF value broadcast (BN)   -> a psum of the (tiny) int delta of the
+    state vector after each color update — each node is owned by exactly one
+    device (the Sec. IV-B mapping), so deltas are disjoint.
+
+Chains are the pure-DP axis ("data"; "pod" stacks more of it multi-pod):
+no cross-chain communication at all, mirroring Alg. 1's MaxChain loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import bayesnet as bnet
+from repro.core.draws import draw_from_logits
+from repro.core.graphs import GridMRF
+from repro.core.interp import build_exp_weight_lut
+from repro.core.mapping import MeshPlacement
+
+# ---------------------------------------------------------------------------
+# MRF: row-partitioned grid with ppermute halo exchange
+# ---------------------------------------------------------------------------
+
+
+def _halo_exchange(lab: jax.Array, axis: str) -> tuple[jax.Array, jax.Array]:
+    """Send boundary rows to mesh neighbors; returns (up_halo, down_halo) of
+    shape (..., 1, W).  Global grid boundary gets -1 (no neighbor)."""
+    n = jax.lax.axis_size(axis)
+    idx = jax.lax.axis_index(axis)
+    down_perm = [(i, (i + 1) % n) for i in range(n)]
+    up_perm = [(i, (i - 1) % n) for i in range(n)]
+    up_halo = jax.lax.ppermute(lab[..., -1:, :], axis, down_perm)
+    down_halo = jax.lax.ppermute(lab[..., :1, :], axis, up_perm)
+    up_halo = jnp.where(idx == 0, -1, up_halo)
+    down_halo = jnp.where(idx == n - 1, -1, down_halo)
+    return up_halo, down_halo
+
+
+def _local_half_step(
+    mrf: GridMRF,
+    lab: jax.Array,  # (B, h_loc, W)
+    ev: jax.Array,  # (h_loc, W)
+    key: jax.Array,
+    parity: int,
+    sampler: str,
+    exp_table,
+    exp_spec,
+    axis: str,
+) -> jax.Array:
+    up_halo, down_halo = _halo_exchange(lab, axis)
+    padded = jnp.concatenate([up_halo, lab, down_halo], axis=-2)
+    up, down = padded[..., :-2, :], padded[..., 2:, :]
+    neg_col = jnp.full(lab.shape[:-1] + (1,), -1, lab.dtype)
+    left = jnp.concatenate([neg_col, lab[..., :, :-1]], axis=-1)
+    right = jnp.concatenate([lab[..., :, 1:], neg_col], axis=-1)
+
+    v_range = jnp.arange(mrf.n_labels, dtype=lab.dtype)
+    cnt = sum(
+        (nb[..., None] == v_range).astype(jnp.float32)
+        for nb in (up, down, left, right)
+    )
+    if mrf.data_cost == "potts":
+        data = mrf.h * (ev[..., None] == v_range).astype(jnp.float32)
+    else:
+        diff = (ev[..., None] - v_range).astype(jnp.float32)
+        data = -mrf.h * diff * diff
+    logp = mrf.theta * cnt + data
+    new = draw_from_logits(logp, key, sampler, exp_table, exp_spec)
+
+    h_loc, w = lab.shape[-2], lab.shape[-1]
+    row0 = jax.lax.axis_index(axis) * h_loc
+    gr = row0 + jnp.arange(h_loc)[:, None]
+    gc = jnp.arange(w)[None, :]
+    mask = ((gr + gc) % 2) == parity
+    return jnp.where(mask, new, lab)
+
+
+def mrf_gibbs_sharded(
+    mrf: GridMRF,
+    evidence: jax.Array,
+    key: jax.Array,
+    mesh: jax.sharding.Mesh,
+    *,
+    n_chains: int,
+    n_iters: int,
+    sampler: str = "lut_ky",
+    chain_axes: tuple[str, ...] = ("data",),
+    grid_axis: str = "model",
+):
+    """Chromatic Gibbs with the grid row-sharded over `grid_axis` and chains
+    sharded over `chain_axes`.  Returns final labels (B, H, W)."""
+    exp_table, exp_spec = build_exp_weight_lut()
+    n_grid = int(np.prod([mesh.shape[a] for a in (grid_axis,)]))
+    assert mrf.height % n_grid == 0, "grid rows must divide over devices"
+    n_chain_dev = int(np.prod([mesh.shape[a] for a in chain_axes]))
+    assert n_chains % n_chain_dev == 0
+
+    chain_spec = P(chain_axes if len(chain_axes) > 1 else chain_axes[0])
+
+    def body(ev_loc, key):
+        ci = jax.lax.axis_index(chain_axes[0])
+        for a in chain_axes[1:]:
+            ci = ci * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        gi = jax.lax.axis_index(grid_axis)
+        key = jax.random.fold_in(jax.random.fold_in(key, ci), gi)
+        k0, key = jax.random.split(key)
+        lab = jax.random.randint(
+            k0,
+            (n_chains // n_chain_dev, mrf.height // n_grid, mrf.width),
+            0,
+            mrf.n_labels,
+            jnp.int32,
+        )
+
+        def it(t, carry):
+            lab, key = carry
+            key, ka, kb = jax.random.split(key, 3)
+            lab = _local_half_step(
+                mrf, lab, ev_loc, ka, 0, sampler, exp_table, exp_spec,
+                grid_axis,
+            )
+            lab = _local_half_step(
+                mrf, lab, ev_loc, kb, 1, sampler, exp_table, exp_spec,
+                grid_axis,
+            )
+            return lab, key
+
+        lab, _ = jax.lax.fori_loop(0, n_iters, it, (lab, key))
+        return lab
+
+    f = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(grid_axis, None), P()),
+        out_specs=P(chain_spec[0] if len(chain_axes) == 1 else chain_axes,
+                    grid_axis, None),
+        check_vma=False,
+    )
+    return jax.jit(f)(evidence, key)
+
+
+# ---------------------------------------------------------------------------
+# Bayes nets: color groups partitioned over devices per the Sec. IV-B mapping
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ShardedGroup:
+    """One color group partitioned over n_dev devices, padded to equal width.
+    All arrays carry a leading (n_dev,) axis; node id == n_nodes marks a pad
+    slot (dropped by out-of-bounds scatter)."""
+
+    nodes: jax.Array  # (n_dev, nc_max)
+    cards: jax.Array
+    base: jax.Array  # (n_dev, nc_max, F)
+    stride: jax.Array  # (n_dev, nc_max, F, S)
+    scope_var: jax.Array
+    is_self: jax.Array
+
+
+jax.tree_util.register_dataclass(
+    ShardedGroup, ["nodes", "cards", "base", "stride", "scope_var", "is_self"], []
+)
+
+
+def shard_bn_groups(
+    cbn: bnet.CompiledBayesNet,
+    n_dev: int,
+    placement: MeshPlacement | None = None,
+) -> list[ShardedGroup]:
+    """Partition each color group across devices.  With a mapping (Sec. IV-B)
+    nodes go to their placed core modulo n_dev; otherwise round-robin."""
+    out = []
+    for g in cbn.groups:
+        nodes = np.asarray(g.nodes)
+        if placement is not None:
+            owner = placement.placement[nodes] % n_dev
+        else:
+            owner = np.arange(len(nodes)) % n_dev
+        parts = [np.where(owner == d)[0] for d in range(n_dev)]
+        nc_max = max(1, max(len(p) for p in parts))
+
+        def pack(arr, pad_value=0):
+            arr = np.asarray(arr)
+            res = np.full((n_dev, nc_max) + arr.shape[1:], pad_value,
+                          arr.dtype)
+            for d, p in enumerate(parts):
+                res[d, : len(p)] = arr[p]
+            return jnp.asarray(res)
+
+        out.append(
+            ShardedGroup(
+                nodes=pack(np.asarray(g.nodes), pad_value=cbn.n_nodes),
+                cards=pack(np.asarray(g.cards), pad_value=1),
+                base=pack(np.asarray(g.base)),  # pad base 0 -> dummy entry
+                stride=pack(np.asarray(g.stride)),
+                scope_var=pack(np.asarray(g.scope_var)),
+                is_self=pack(np.asarray(g.is_self)),
+            )
+        )
+    return out
+
+
+def bn_gibbs_sharded(
+    cbn: bnet.CompiledBayesNet,
+    key: jax.Array,
+    mesh: jax.sharding.Mesh,
+    *,
+    n_chains: int,
+    n_iters: int,
+    burn_in: int,
+    sampler: str = "lut_ky",
+    placement: MeshPlacement | None = None,
+    chain_axis: str = "data",
+    node_axis: str = "model",
+):
+    """Distributed Alg. 2: nodes of a color split over `node_axis` devices,
+    chains over `chain_axis`.  After each color, the disjoint updates are
+    merged with one small integer psum (the shared-RF exchange).
+    Returns (marginals (n, V), final local vals)."""
+    n_dev = mesh.shape[node_axis]
+    n_chain_dev = mesh.shape[chain_axis]
+    assert n_chains % n_chain_dev == 0
+    sgroups = shard_bn_groups(cbn, n_dev, placement)
+    b_loc = n_chains // n_chain_dev
+
+    def body(key):
+        ci = jax.lax.axis_index(chain_axis)
+        di = jax.lax.axis_index(node_axis)
+        kc = jax.random.fold_in(key, ci)
+        k0, kc = jax.random.split(kc)
+        rnd = jax.random.randint(
+            k0, (b_loc, cbn.n_nodes), 0, 1 << 30, jnp.int32
+        ) % jnp.maximum(cbn.cards[None], 1)
+        vals = jnp.where(cbn.free_mask[None], rnd, cbn.init_vals[None])
+
+        def sweep(vals, kk):
+            keys = jax.random.split(kk, len(sgroups))
+            for sg, k in zip(sgroups, keys):
+                g = bnet.ColorGroup(
+                    nodes=sg.nodes[di],
+                    cards=sg.cards[di],
+                    base=sg.base[di],
+                    stride=sg.stride[di],
+                    scope_var=sg.scope_var[di],
+                    is_self=sg.is_self[di],
+                )
+                logp = bnet.group_log_conditionals(cbn, g, vals)
+                lab = draw_from_logits(
+                    logp, jax.random.fold_in(k, di), sampler,
+                    cbn.exp_table, cbn.exp_spec,
+                )
+                upd = vals.at[:, g.nodes].set(lab, mode="drop")
+                # disjoint ownership => one psum merges all devices' updates
+                vals = vals + jax.lax.psum(upd - vals, node_axis)
+            return vals
+
+        hist0 = jnp.zeros((cbn.n_nodes, cbn.max_card), jnp.int32)
+
+        def it(t, carry):
+            vals, kk, hist = carry
+            kk, sub = jax.random.split(kk)
+            vals = sweep(vals, sub)
+            onehot = (
+                vals[..., None] == jnp.arange(cbn.max_card, dtype=jnp.int32)
+            ).astype(jnp.int32)
+            hist = hist + jnp.where(t >= burn_in, onehot.sum(0), 0)
+            return vals, kk, hist
+
+        vals, _, hist = jax.lax.fori_loop(0, n_iters, it, (vals, kc, hist0))
+        hist = jax.lax.psum(hist, chain_axis)
+        return hist, vals
+
+    f = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(),),
+        out_specs=(P(), P(chain_axis, None)),
+        check_vma=False,
+    )
+    hist, vals = jax.jit(f)(key)
+    card_mask = (
+        jnp.arange(cbn.max_card, dtype=jnp.int32)[None] < cbn.cards[:, None]
+    )
+    denom = jnp.maximum(hist.sum(-1, keepdims=True), 1)
+    return jnp.where(card_mask, hist / denom, 0.0), vals

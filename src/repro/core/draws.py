@@ -1,0 +1,66 @@
+"""Pluggable discrete-draw pipelines shared by the BN and MRF Gibbs engines.
+
+  lut_ky   : LUT-exp int8 weights + rejection-KY      (AIA, paper C1+C2)
+  exact_ky : exact exp, 15-bit weights + rejection-KY (ablates C2)
+  cdf      : normalized softmax + inverse-CDF search  (PULP/CPU baseline)
+  gumbel   : Gumbel-max argmax                        (beyond-paper TPU-native)
+
+All take (..., V) unnormalized log-potentials and return (...) int32 labels.
+The KY paths are normalization-free end to end — the paper's core claim.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ky as ky_core
+from repro.core.interp import LUTSpec, interp_ref
+
+SAMPLERS = ("lut_ky", "exact_ky", "cdf", "gumbel")
+
+
+def draw_from_logits(
+    logp: jax.Array,
+    key: jax.Array,
+    sampler: str,
+    exp_table: jax.Array | None = None,
+    exp_spec: LUTSpec | None = None,
+    precision: int = 16,
+    max_retries: int = 8,
+) -> jax.Array:
+    shape = logp.shape[:-1]
+    v = logp.shape[-1]
+    flat = logp.reshape(-1, v)
+    if sampler == "gumbel":
+        gum = jax.random.gumbel(key, flat.shape, flat.dtype)
+        return jnp.argmax(flat + gum, axis=-1).astype(jnp.int32).reshape(shape)
+    if sampler == "cdf":
+        p = jax.nn.softmax(flat, axis=-1)
+        c = jnp.cumsum(p, axis=-1)
+        u = jax.random.uniform(key, (flat.shape[0], 1), flat.dtype)
+        lab = jnp.minimum(jnp.sum(c < u, axis=-1), v - 1)
+        return lab.astype(jnp.int32).reshape(shape)
+
+    z = flat - jax.lax.stop_gradient(jnp.max(flat, axis=-1, keepdims=True))
+    if sampler == "lut_ky":
+        assert exp_table is not None and exp_spec is not None
+        w = jnp.maximum(jnp.round(interp_ref(z, exp_table, exp_spec)), 0.0)
+        w = w.astype(jnp.int32)
+        weight_bits = 8
+    elif sampler == "exact_ky":
+        weight_bits = 15
+        w = ky_core.quantize_probs(jnp.exp(z), bits=weight_bits)
+    else:
+        raise ValueError(f"unknown sampler {sampler!r}")
+    # sum(m) <= V * 2^weight_bits must fit in 2^precision or the rejection
+    # bin would go negative and corrupt the DDG tree
+    precision = max(precision, weight_bits + (v - 1).bit_length() + 1)
+    n_words = -(-precision * max_retries // 32)
+    words = ky_core.random_words(key, (flat.shape[0],), n_words)
+    # early-exit walk: identical outputs to ky_sample_ref for the same
+    # words, but O(entropy) steps instead of precision*max_retries
+    labels, _ = ky_core.ky_sample_fast(
+        w, words, n_bins=v, precision=precision, max_retries=max_retries
+    )
+    return labels.reshape(shape)

@@ -1,0 +1,72 @@
+"""Token data pipeline: deterministic, shard-aware, exactly resumable.
+
+Batches are a pure function of (seed, step), so restart-from-checkpoint
+reproduces the stream bit-for-bit with zero pipeline state beyond the step
+counter — the simplest correct fault-tolerance story, and the one that keeps
+working when the mesh shape changes on elastic restart (the global batch is
+laid out identically; only its device placement differs).
+
+Sources:
+* `SyntheticLM` — a seeded Zipf-ish stream with local structure (copy/shift
+  patterns) so a ~100M model trained for a few hundred steps shows a clearly
+  decreasing loss (examples/train_lm.py);
+* `BinCorpus` — memory-mapped flat token file (uint16/uint32) with
+  wrap-around sampling, for real corpora.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass
+class SyntheticLM:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+
+    def batch(self, step: int) -> dict[str, np.ndarray]:
+        rng = np.random.default_rng((self.seed << 20) ^ step)
+        b, s = self.global_batch, self.seq_len
+        # Zipf marginals + short-range copy structure => learnable bigrams
+        base = rng.zipf(1.3, size=(b, s + 1)) % self.vocab
+        shift = np.roll(base, 3, axis=1)
+        mask = rng.random((b, s + 1)) < 0.5
+        toks = np.where(mask, shift, base).astype(np.int32)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+@dataclasses.dataclass
+class BinCorpus:
+    path: str
+    vocab: int
+    seq_len: int
+    global_batch: int
+    dtype: str = "uint16"
+    seed: int = 0
+
+    def __post_init__(self):
+        self._data = np.memmap(self.path, dtype=self.dtype, mode="r")
+        assert len(self._data) > self.seq_len + 1, "corpus too small"
+
+    def batch(self, step: int) -> dict[str, np.ndarray]:
+        rng = np.random.default_rng((self.seed << 20) ^ step)
+        n = len(self._data) - self.seq_len - 1
+        starts = rng.integers(0, n, size=self.global_batch)
+        rows = np.stack(
+            [self._data[s : s + self.seq_len + 1] for s in starts]
+        ).astype(np.int32) % self.vocab
+        return {"tokens": rows[:, :-1], "labels": rows[:, 1:]}
+
+
+def place_batch(batch: dict[str, np.ndarray], shardings: dict):
+    """Host batch -> device arrays with the given NamedShardings."""
+    return {
+        k: jax.device_put(v, shardings[k]) if k in shardings
+        else jax.device_put(v)
+        for k, v in batch.items()
+    }

@@ -1,0 +1,202 @@
+"""Pallas TPU kernel for the rejection-based Knuth-Yao sampler (paper C1).
+
+One kernel invocation draws one exact sample per batch row from an
+unnormalized int32 weight vector, consuming packed random bits.  The paper's
+per-cycle datapath (Fig. 5) maps onto the TPU as:
+
+  hardware AIA                          this kernel
+  ------------------------------------  -------------------------------------
+  32-bin distribution in private RF     (block_b, 128) int32 weights in VMEM
+  per-cycle DDG column read (SU.B)      on-the-fly shift of the weight lanes
+  parallel-prefix adder over bins       cumsum via lower-triangular MXU matmul
+  LFSR random bit                       packed jax.random words in VMEM
+  FSM rejection-restart                 masked lane-wise restart, early-exit
+                                        while_loop => O(H) expected levels
+
+Batching over VPU sublanes replaces AIA's 16 parallel cores: all same-color
+RVs / serving requests walk their DDG trees in lock-step, each with private
+state, exactly like the paper's asynchronous cores between barriers.
+
+Block layout: bins live on the 128-wide lane axis (N + rejection bin <= 128;
+wider distributions are handled hierarchically by token_sampler.py), batch on
+the sublane axis.  The whole working set (weights, bit words, walk state) for
+a block is VMEM-resident; the distribution is produced, walked and discarded
+without an HBM round-trip — the paper's private-RF locality argument.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 128
+DEFAULT_BLOCK_B = 256
+
+
+def _cumsum_lanes(x: jax.Array) -> jax.Array:
+    """Inclusive cumsum along the last (lane) axis via triangular matmul.
+
+    TPU Pallas has no native 1-pass lane scan; an (N, N) lower-triangular
+    int32 matmul on the MXU is the idiomatic replacement (the paper uses a
+    parallel-prefix adder for the same reduction over its 32 bins).
+    """
+    n = x.shape[-1]
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
+           <= jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)).astype(jnp.int32)
+    return jax.lax.dot_general(
+        x, tri, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def preprocess_lanes(m: jax.Array, n_bins: int, precision: int) -> jax.Array:
+    """In-VMEM preprocessing on lane-padded weights (b, LANES): clamp ->
+    scale-to-fill -> write the rejection bin into lane `n_bins` (Eqns. 8-9)."""
+    b = m.shape[0]
+    lane = jax.lax.broadcasted_iota(jnp.int32, (b, LANES), 1)
+    m = jnp.maximum(m, 0)
+    m = jnp.where(lane < n_bins, m, 0)
+    s = jnp.sum(m, axis=-1, keepdims=True)
+    m = jnp.where(s > 0, m, jnp.where(lane < n_bins, 1, 0))
+    s = jnp.sum(m, axis=-1, keepdims=True)
+    k = jnp.maximum((1 << precision) // s, 1)
+    m = m * k
+    rej = (1 << precision) - jnp.sum(m, axis=-1, keepdims=True)
+    return jnp.where(lane == n_bins, rej, m)
+
+
+def ddg_walk(
+    m_ext: jax.Array, words: jax.Array, *, n_bins: int, precision: int,
+    total_steps: int,
+):
+    """Early-exit batched DDG walk on prepared lane-padded weights.
+
+    m_ext (b, LANES) int32 summing to 2^precision (rejection in lane n_bins),
+    words (b, n_words) uint32.  Returns (labels, bits, rejs, done), all
+    (b, 1); labels is -1 where the bit budget ran out (caller applies the
+    argmax fallback).  Runs inside Pallas kernel bodies and plain jit alike.
+    """
+    b = m_ext.shape[0]
+    lane = jax.lax.broadcasted_iota(jnp.int32, (b, LANES), 1)
+    zi = jnp.zeros((b, 1), jnp.int32)
+
+    def cond(carry):
+        t, d, level, label, done, bits, rejs = carry
+        return (t < total_steps) & jnp.any(~done)
+
+    def body(carry):
+        t, d, level, label, done, bits, rejs = carry
+        word = jax.lax.dynamic_slice_in_dim(words, t // 32, 1, axis=1)
+        shift = jnp.asarray(t % 32).astype(words.dtype)
+        one = jnp.asarray(1, words.dtype)
+        bit = (jnp.right_shift(word, shift) & one).astype(jnp.int32)  # (b, 1)
+        active = ~done
+        d = jnp.where(active, 2 * d + bit, d)
+        col = (m_ext >> (precision - 1 - level)) & 1  # (b, LANES)
+        c = _cumsum_lanes(col)
+        total = c[:, LANES - 1:LANES]
+        hit = c > d
+        # first hit lane = min lane index among hits
+        idx = jnp.min(jnp.where(hit, lane, LANES), axis=-1, keepdims=True)
+        terminated = active & (total > d)
+        is_rej = idx >= n_bins
+        accept = terminated & ~is_rej
+        reject = terminated & is_rej
+        cont = active & ~terminated
+        return (
+            t + 1,
+            jnp.where(reject, 0, jnp.where(cont, d - total, d)),
+            jnp.where(reject, 0, jnp.where(cont, level + 1, level)),
+            jnp.where(accept, idx, label),
+            done | accept,
+            bits + active.astype(jnp.int32),
+            rejs + reject.astype(jnp.int32),
+        )
+
+    t0 = jnp.zeros((), jnp.int32)
+    carry = (t0, zi, zi, zi - 1, jnp.zeros((b, 1), bool), zi, zi)
+    _, d, level, label, done, bits, rejs = jax.lax.while_loop(cond, body, carry)
+    return label, bits, rejs, done
+
+
+def argmax_fallback(
+    m: jax.Array, labels: jax.Array, done: jax.Array, n_bins: int
+) -> jax.Array:
+    """Fallback for the (<2^-max_retries) bit-exhaustion case: argmax weight."""
+    b = m.shape[0]
+    lane = jax.lax.broadcasted_iota(jnp.int32, (b, LANES), 1)
+    m = jnp.where(lane < n_bins, m, -1)
+    mx = jnp.max(m, axis=-1, keepdims=True)
+    amax = jnp.min(jnp.where(m == mx, lane, LANES), axis=-1, keepdims=True)
+    return jnp.where(done, labels, amax)
+
+
+def _ky_kernel(
+    w_ref, words_ref, labels_ref, bits_ref, rej_ref, fb_ref,
+    *, n_bins: int, precision: int, total_steps: int,
+):
+    m_ext = preprocess_lanes(w_ref[...], n_bins, precision)
+    label, bits, rejs, done = ddg_walk(
+        m_ext, words_ref[...], n_bins=n_bins, precision=precision,
+        total_steps=total_steps,
+    )
+    labels_ref[...] = argmax_fallback(w_ref[...], label, done, n_bins)
+    bits_ref[...] = bits
+    rej_ref[...] = rejs
+    fb_ref[...] = (~done).astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_bins", "precision", "max_retries", "block_b", "interpret"),
+)
+def ky_sample_kernel(
+    weights: jax.Array,
+    words: jax.Array,
+    *,
+    n_bins: int,
+    precision: int = 16,
+    max_retries: int = 8,
+    block_b: int = DEFAULT_BLOCK_B,
+    interpret: bool = False,
+):
+    """Draw one sample per row. weights (B, LANES) int32 (bins padded to 128,
+    lane `n_bins` reserved for the rejection bin), words (B, n_words) uint32.
+
+    Returns (labels (B,), stats dict) — bit-exact vs core.ky.ky_sample_ref.
+    """
+    assert weights.shape[-1] == LANES, "pad bins to 128 lanes (ops.ky_sample)"
+    assert n_bins < LANES, "need a free lane for the rejection bin"
+    b, n_words = words.shape[0], words.shape[1]
+    total_steps = precision * max_retries
+    assert n_words * 32 >= total_steps, "not enough random bits"
+    block_b = min(block_b, b)
+    grid = (pl.cdiv(b, block_b),)
+
+    kernel = functools.partial(
+        _ky_kernel, n_bins=n_bins, precision=precision, total_steps=total_steps
+    )
+    out_shape = [jax.ShapeDtypeStruct((b, 1), jnp.int32)] * 4
+    spec_b = lambda shp: pl.BlockSpec(shp, lambda i: (i, 0),
+                                      memory_space=pltpu.VMEM)
+    labels, bits, rejs, fb = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec_b((block_b, LANES)), spec_b((block_b, n_words))],
+        out_specs=[spec_b((block_b, 1))] * 4,
+        out_shape=out_shape,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+    )(weights, words)
+    stats = {
+        "bits_used": bits[:, 0],
+        "rejections": rejs[:, 0],
+        "fallback": fb[:, 0].astype(bool),
+    }
+    return labels[:, 0], stats

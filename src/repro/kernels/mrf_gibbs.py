@@ -1,0 +1,164 @@
+"""Fused Pallas kernel: one checkerboard Gibbs half-step on a grid MRF.
+
+This is the AIA inner loop (paper Sec. III "Approximate Inference Overview")
+as a single VMEM-resident pipeline, fusing all four innovations:
+
+  1. neighbor-label exchange (C4)  — halo rows come from the adjacent row
+     blocks (BlockSpec index maps i-1 / i / i+1), the intra-tile shifts are
+     VMEM slices; across devices, distributed.py replaces the halo load
+     with a `ppermute` — the mesh-neighbor register read, ICI-native;
+  2. energy computation (programmable ALU) — Potts smoothness + data cost;
+  3. LUT-exp via the interpolation unit (C2) — `interp_eval`, int8 weights;
+  4. rejection-KY draw (C1) — `ddg_walk` over V<=32 lanes per site.
+
+The conditional distribution of every site is produced, sampled and
+discarded inside the tile — zero HBM round-trips for intermediates, the
+paper's private-RF locality argument. Bit-exact against ref.mrf_gibbs_half_step.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.interp import LUTSpec
+from repro.kernels.interp_lut import interp_eval
+from repro.kernels.ky_sampler import LANES, argmax_fallback, ddg_walk, \
+    preprocess_lanes
+
+DEFAULT_BLOCK_H = 32
+
+
+def _mrf_kernel(
+    lab_prev_ref, lab_ref, lab_next_ref, ev_ref, words_ref, tab_ref, out_ref,
+    *, parity: int, theta: float, h: float, n_labels: int, data_cost: str,
+    x0: float, dx: float, lut_size: int, precision: int, total_steps: int,
+    block_h: int, n_blocks: int, width: int,
+):
+    i = pl.program_id(0)
+    lab = lab_ref[...]  # (block_h, W)
+    neg = jnp.full((1, width), -1, jnp.int32)
+
+    # --- C4: neighbor labels; halo rows from adjacent blocks ---------------
+    up_halo = jnp.where(i > 0, lab_prev_ref[block_h - 1 : block_h, :], neg)
+    down_halo = jnp.where(i < n_blocks - 1, lab_next_ref[0:1, :], neg)
+    up = jnp.concatenate([up_halo, lab[:-1, :]], axis=0)
+    down = jnp.concatenate([lab[1:, :], down_halo], axis=0)
+    neg_col = jnp.full((block_h, 1), -1, jnp.int32)
+    left = jnp.concatenate([neg_col, lab[:, :-1]], axis=1)
+    right = jnp.concatenate([lab[:, 1:], neg_col], axis=1)
+
+    ev = ev_ref[...]
+    s = block_h * width
+
+    # --- energies per candidate value, same op order as the ref oracle -----
+    z_cols = []
+    e_max = jnp.full((block_h, width), -jnp.inf, jnp.float32)
+    energies = []
+    for v in range(n_labels):
+        cnt = (
+            ((up == v).astype(jnp.float32) + (down == v).astype(jnp.float32))
+            + (left == v).astype(jnp.float32)
+        ) + (right == v).astype(jnp.float32)
+        if data_cost == "potts":
+            data = h * (ev == v).astype(jnp.float32)
+        else:
+            diff = (ev - v).astype(jnp.float32)
+            data = -h * diff * diff
+        e = theta * cnt + data
+        energies.append(e)
+        e_max = jnp.maximum(e_max, e)
+    for v in range(n_labels):
+        z_cols.append((energies[v] - e_max).reshape(s, 1))
+
+    # --- C2: LUT-exp -> int8 weights on the (site, value) layout -----------
+    z = jnp.concatenate(z_cols, axis=1)  # (s, V)
+    w = jnp.maximum(jnp.round(interp_eval(z, tab_ref, x0, dx, lut_size)), 0.0)
+    w = w.astype(jnp.int32)
+    pad = jnp.zeros((s, LANES - n_labels), jnp.int32)
+    w = jnp.concatenate([w, pad], axis=1)  # (s, LANES)
+
+    # --- C1: rejection-KY walk over all sites of the tile ------------------
+    words = words_ref[...].reshape(s, -1)
+    m_ext = preprocess_lanes(w, n_labels, precision)
+    label, bits, rejs, done = ddg_walk(
+        m_ext, words, n_bins=n_labels, precision=precision,
+        total_steps=total_steps,
+    )
+    new = argmax_fallback(w, label, done, n_labels).reshape(block_h, width)
+
+    # --- checkerboard scatter (only this color updates) --------------------
+    gr = i * block_h + jax.lax.broadcasted_iota(jnp.int32, (block_h, width), 0)
+    gc = jax.lax.broadcasted_iota(jnp.int32, (block_h, width), 1)
+    mask = ((gr + gc) % 2) == parity
+    out_ref[...] = jnp.where(mask, new, lab)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "parity", "theta", "h", "n_labels", "data_cost", "spec",
+        "precision", "max_retries", "block_h", "interpret",
+    ),
+)
+def mrf_half_step_kernel(
+    labels: jax.Array,
+    evidence: jax.Array,
+    words: jax.Array,
+    exp_table: jax.Array,
+    *,
+    parity: int,
+    theta: float,
+    h: float,
+    n_labels: int,
+    spec: LUTSpec,
+    data_cost: str = "potts",
+    precision: int = 16,
+    max_retries: int = 8,
+    block_h: int = DEFAULT_BLOCK_H,
+    interpret: bool = False,
+) -> jax.Array:
+    """labels, evidence: (H, W) int32; words: (H, W * n_words) uint32 (row-
+    major (H, W, n_words) flattened); exp_table: (1, L) f32 weight table."""
+    height, width = labels.shape
+    assert n_labels < LANES
+    block_h = min(block_h, height)
+    assert height % block_h == 0, "pad H to a multiple of block_h"
+    n_blocks = height // block_h
+    total_steps = precision * max_retries
+    assert words.shape == (height, width * (-(-total_steps // 32)))
+
+    kernel = functools.partial(
+        _mrf_kernel, parity=parity, theta=theta, h=h, n_labels=n_labels,
+        data_cost=data_cost, x0=spec.x0, dx=spec.dx, lut_size=spec.size,
+        precision=precision, total_steps=total_steps, block_h=block_h,
+        n_blocks=n_blocks, width=width,
+    )
+
+    def blk(idx_fn, cols):
+        return pl.BlockSpec((block_h, cols), idx_fn, memory_space=pltpu.VMEM)
+
+    n_words_cols = words.shape[1]
+    return pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            blk(lambda i: (jnp.maximum(i - 1, 0), 0), width),  # halo above
+            blk(lambda i: (i, 0), width),
+            blk(lambda i: (jnp.minimum(i + 1, n_blocks - 1), 0), width),
+            blk(lambda i: (i, 0), width),  # evidence
+            blk(lambda i: (i, 0), n_words_cols),  # random words
+            pl.BlockSpec((1, exp_table.shape[1]), lambda i: (0, 0),
+                         memory_space=pltpu.VMEM),
+        ],
+        out_specs=blk(lambda i: (i, 0), width),
+        out_shape=jax.ShapeDtypeStruct((height, width), jnp.int32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+    )(labels, labels, labels, evidence, words, exp_table)

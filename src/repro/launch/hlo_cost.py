@@ -1,0 +1,239 @@
+"""Trip-count-aware cost model over optimized (post-SPMD) HLO text.
+
+XLA's built-in ``compiled.cost_analysis()`` counts a while-loop body ONCE,
+which silently undercounts any scan-over-layers program by ~n_layers.  This
+module re-derives the three roofline inputs by walking the HLO text:
+
+  * flops            — 2·numel(result)·prod(contracting dims) per dot,
+                        multiplied by the loop multiplier of its computation;
+  * hbm_bytes        — operand+result bytes of top-level fusions / dots /
+                        copies / reduces / collectives (fusion internals are
+                        register/VMEM-resident by construction), x multiplier;
+  * collective_bytes — result bytes of all-gather / all-reduce /
+                        reduce-scatter / all-to-all / collective-permute,
+                        x multiplier.
+
+Loop multipliers: `while(...) condition=%c body=%b` contributes
+trip_count(c) to b; fusion `calls=`/`to_apply=` edges contribute 1; the
+multiplier graph is a DAG rooted at ENTRY and resolved by fixed-point
+propagation.  Trip counts are read from the `constant(N)` feeding the
+condition's `compare(..., LT)` — exact for lax.scan/fori_loop loops (which
+is all this codebase emits); `while_loop`s with data-dependent bounds (the
+KY early-exit walk) fall back to their static upper bound, making the
+roofline conservative for the sampler (documented in EXPERIMENTS.md).
+
+Validated in tests/test_hlo_cost.py against analytically-known programs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z]+[0-9]*)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_TRAFFIC_OPS = ("fusion", "dot", "copy", "reduce", "convolution",
+                "dynamic-slice", "dynamic-update-slice", "gather", "scatter",
+                "sort", "concatenate", "transpose", "broadcast", "iota",
+                "convert", "slice", "pad", "reshape", "select", "rng",
+                "add", "multiply", "subtract", "divide", "exponential",
+                "compare", "maximum", "minimum", "tanh", "custom-call",
+                ) + _COLLECTIVES
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    type_str: str
+    opcode: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instructions: list[Instruction]
+    is_entry: bool = False
+
+
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\(.*?\)|[a-z]+[0-9]*\[[0-9,]*\](?:\{[^}]*\})?)\s*([\w\-\$]+)\("
+)
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.*\{")
+
+
+def parse_module(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in hlo.splitlines():
+        mc = _COMP_RE.match(line)
+        if mc and not line.lstrip().startswith("//"):
+            cur = Computation(mc.group(2), [], is_entry=bool(mc.group(1)))
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        mi = _DEF_RE.match(line)
+        if mi:
+            cur.instructions.append(
+                Instruction(mi.group(1), mi.group(2), mi.group(3), line)
+            )
+        if line.strip() == "}":
+            cur = None
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """Bound constant of an `i < N` loop condition (1 if unknown)."""
+    consts = []
+    for ins in cond.instructions:
+        consts += [int(c) for c in re.findall(r"constant\((\d+)\)", ins.line)]
+    # the compare bound is the constant actually fed to the comparison; with
+    # wrapped fusions we cannot see inside, so take the max s32 constant —
+    # exact for scan/fori conditions, an upper bound otherwise
+    return max(consts) if consts else 1
+
+
+def multipliers(comps: dict[str, Computation]) -> dict[str, float]:
+    """Execution-count multiplier per computation (ENTRY = 1)."""
+    edges: dict[str, list[tuple[str, float]]] = defaultdict(list)
+    for comp in comps.values():
+        for ins in comp.instructions:
+            m = re.search(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)",
+                          ins.line)
+            if ins.opcode == "while" and m:
+                cond_name, body_name = m.group(1), m.group(2)
+                trips = _trip_count(comps[cond_name]) if cond_name in comps \
+                    else 1
+                edges[comp.name].append((body_name, float(max(trips, 1))))
+                edges[comp.name].append((cond_name, float(max(trips, 1))))
+                continue
+            for attr in ("calls", "to_apply", "body", "branch_computations"):
+                for mm in re.finditer(rf"{attr}=%?([\w\.\-{{}}, ]+)",
+                                      ins.line):
+                    for name in re.findall(r"[\w\.\-]+", mm.group(1)):
+                        if name in comps:
+                            edges[comp.name].append((name, 1.0))
+
+    mult: dict[str, float] = {
+        c.name: (1.0 if c.is_entry else 0.0) for c in comps.values()
+    }
+    # fixed-point over the call DAG (depth is small)
+    for _ in range(50):
+        changed = False
+        new = {c: (1.0 if comps[c].is_entry else 0.0) for c in comps}
+        for src, outs in edges.items():
+            for dst, w in outs:
+                new[dst] = new.get(dst, 0.0) + mult.get(src, 0.0) * w
+        for c in comps:
+            if abs(new[c] - mult[c]) > 1e-9:
+                changed = True
+        mult = new
+        if not changed:
+            break
+    return mult
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    collective_by_op: dict[str, float]
+    collective_counts: dict[str, float]
+    xla_flops_once: float = 0.0
+
+
+def analyze(hlo: str) -> HloCost:
+    comps = parse_module(hlo)
+    mult = multipliers(comps)
+
+    flops = 0.0
+    hbm = 0.0
+    coll_b: dict[str, float] = {c: 0.0 for c in _COLLECTIVES}
+    coll_n: dict[str, float] = {c: 0.0 for c in _COLLECTIVES}
+
+    for comp in comps.values():
+        m = mult.get(comp.name, 0.0)
+        if m == 0.0:
+            continue
+        symtab = {i.name: i.type_str for i in comp.instructions}
+        fused = comp.name.startswith("fused_") or "fused_computation" in \
+            comp.name or "wrapped_" in comp.name
+        for ins in comp.instructions:
+            # ---- flops: dots wherever they live --------------------------
+            if ins.opcode == "dot":
+                ops = re.findall(r"\(%([\w\.\-]+)(?:,\s*%([\w\.\-]+))?\)",
+                                 ins.line.split("dot(")[1])
+                args = re.match(r"([^)]*)\)", ins.line.split("dot(")[1])
+                names = re.findall(r"%([\w\.\-]+)", args.group(1)) if args \
+                    else []
+                lhs_dims = []
+                mm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}",
+                               ins.line)
+                if mm and names and names[0] in symtab:
+                    shape = _shape_dims(symtab[names[0]])
+                    for dstr in mm.group(1).split(","):
+                        if dstr and int(dstr) < len(shape):
+                            lhs_dims.append(shape[int(dstr)])
+                k = 1
+                for d in lhs_dims:
+                    k *= d
+                out_elems = max(_type_bytes(ins.type_str), 1)
+                # element count: bytes / dtype size
+                dt = _SHAPE_RE.search(ins.type_str)
+                esize = _DTYPE_BYTES.get(dt.group(1), 4) if dt else 4
+                flops += m * 2.0 * (out_elems / esize) * k
+            elif ins.opcode == "convolution":
+                out_elems = _type_bytes(ins.type_str) / 4
+                flops += m * 2.0 * out_elems  # lower bound; convs are rare
+
+            # ---- memory traffic: top-level (non-fused) ops ---------------
+            if not fused and ins.opcode in _TRAFFIC_OPS:
+                b = _type_bytes(ins.type_str)
+                arg_part = ins.line.split("(", 1)[1]
+                for nm in re.findall(r"%([\w\.\-]+)", arg_part):
+                    b += _type_bytes(symtab.get(nm, ""))
+                hbm += m * b
+
+            # ---- collectives ---------------------------------------------
+            for c in _COLLECTIVES:
+                if ins.opcode in (c, f"{c}-start"):
+                    coll_b[c] += m * _type_bytes(ins.type_str)
+                    coll_n[c] += m
+    return HloCost(
+        flops=flops,
+        hbm_bytes=hbm,
+        collective_bytes=sum(coll_b.values()),
+        collective_by_op=coll_b,
+        collective_counts=coll_n,
+    )

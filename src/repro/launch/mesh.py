@@ -1,0 +1,40 @@
+"""Production mesh construction (harness MULTI-POD DRY-RUN step 1).
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+def make_mesh(shape, axes) -> jax.sharding.Mesh:
+    """Arbitrary mesh for tests/examples (e.g. (2, 4) on 8 host devices)."""
+    return jax.make_mesh(
+        tuple(shape), tuple(axes),
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+def dp_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
+    """Data-parallel axes: ('pod','data') multi-pod, ('data',) single-pod."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def fsdp_axis(mesh: jax.sharding.Mesh) -> str | None:
+    """Parameters/optimizer shard over 'data' within a pod (never across
+    pods — cross-pod all-gathers would ride the slow DCN every layer)."""
+    return "data" if "data" in mesh.axis_names else None
+
+
+def tp_axis(mesh: jax.sharding.Mesh) -> str | None:
+    return "model" if "model" in mesh.axis_names else None

@@ -1,0 +1,128 @@
+"""Render the dry-run result JSONs into the EXPERIMENTS.md tables."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+CELL_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(results_dir: str, opt: str = "baseline") -> list[dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(results_dir, f"*__{opt}.json"))):
+        out.append(json.load(open(f)))
+    return out
+
+
+def _fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.0f}us"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def roofline_table(recs: list[dict], mesh: str = "single") -> str:
+    rows = [
+        "| arch | cell | t_compute | t_memory | t_collective | bottleneck | "
+        "useful FLOPs | mem GiB/chip | fits16G |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    recs = [r for r in recs if r["mesh"] == mesh]
+    recs.sort(key=lambda r: (r["arch"], CELL_ORDER.index(r["cell"])))
+    for r in recs:
+        if r["status"] != "ok":
+            rows.append(
+                f"| {r['arch']} | {r['cell']} | — | — | — | skipped | — | — "
+                f"| — |"
+            )
+            continue
+        rf = r["roofline"]
+        mem = (r["memory"]["temp_size_in_bytes"]
+               + r["memory"]["argument_size_in_bytes"]) / 2**30
+        rows.append(
+            f"| {r['arch']} | {r['cell']} | {_fmt_s(rf['t_compute_s'])} "
+            f"| {_fmt_s(rf['t_memory_s'])} | {_fmt_s(rf['t_collective_s'])} "
+            f"| {rf['bottleneck']} | {rf['useful_flops_ratio']:.3f} "
+            f"| {mem:.1f} | {'yes' if mem <= 16 else 'NO'} |"
+        )
+    return "\n".join(rows)
+
+
+def dryrun_table(recs: list[dict]) -> str:
+    rows = [
+        "| arch | cell | mesh | status | compile s | args GiB | temp GiB | "
+        "AG GiB | AR GiB | RS GiB | A2A GiB | CP GiB |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    recs = sorted(recs, key=lambda r: (r["arch"],
+                                       CELL_ORDER.index(r["cell"]),
+                                       r["mesh"]))
+    for r in recs:
+        if r["status"] != "ok":
+            rows.append(
+                f"| {r['arch']} | {r['cell']} | {r['mesh']} | skipped "
+                f"({r['reason'][:40]}...) " + "| — " * 8 + "|"
+            )
+            continue
+        c = r["collectives"]["bytes_by_op"]
+        g = 2**30
+        rows.append(
+            f"| {r['arch']} | {r['cell']} | {r['mesh']} | ok "
+            f"| {r['compile_s']:.0f} "
+            f"| {r['memory']['argument_size_in_bytes']/g:.2f} "
+            f"| {r['memory']['temp_size_in_bytes']/g:.2f} "
+            f"| {c.get('all-gather',0)/g:.2f} | {c.get('all-reduce',0)/g:.2f} "
+            f"| {c.get('reduce-scatter',0)/g:.2f} "
+            f"| {c.get('all-to-all',0)/g:.2f} "
+            f"| {c.get('collective-permute',0)/g:.2f} |"
+        )
+    return "\n".join(rows)
+
+
+def bottleneck_notes(recs: list[dict]) -> str:
+    """One sentence per (arch, cell) on what would move the dominant term."""
+    notes = {
+        ("memory", "train"): "dominant term is HBM traffic: raise arithmetic "
+        "intensity (larger per-chip batch, fused kernels, bf16 residuals).",
+        ("memory", "prefill"): "KV/activation traffic bound: shard sequence, "
+        "fuse attention stages, avoid f32 intermediates in the scan.",
+        ("memory", "decode"): "decode is weight-streaming bound (every step "
+        "reads all weights): batch more sequences per chip or quantize "
+        "weights.",
+        ("collective", "train"): "TP all-reduces of activations dominate: "
+        "overlap with compute, reduce-scatter+all-gather (sequence-parallel) "
+        "instead of all-reduce, or shrink TP degree for this size.",
+        ("collective", "prefill"): "same as train: sequence-parallel "
+        "collective schedule.",
+        ("collective", "decode"): "per-token all-reduces dominate at tiny "
+        "per-step compute: fold TP collectives, wider decode batch.",
+        ("compute", "train"): "compute-bound — already near the roofline "
+        "knee; reduce remat recompute or improve causal-block skipping.",
+    }
+    out = []
+    for r in recs:
+        if r["status"] != "ok" or r["mesh"] != "single":
+            continue
+        key = (r["roofline"]["bottleneck"], r["kind"])
+        out.append(f"* **{r['arch']} / {r['cell']}** — "
+                   f"{notes.get(key, 'see table.')}")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    import sys
+
+    d = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
+        os.path.dirname(os.path.dirname(os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__))))),
+        "benchmarks", "results", "dryrun")
+    recs = load(d)
+    print("## Roofline (single pod)\n")
+    print(roofline_table(recs, "single"))
+    print("\n## Dry-run detail\n")
+    print(dryrun_table(recs))

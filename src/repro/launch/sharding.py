@@ -1,0 +1,207 @@
+"""Logical->mesh sharding rules for parameters, optimizer state, batches and
+decode caches (2-D TP x FSDP layout, MaxText-style).
+
+Conventions:
+  * TP ("model" axis): d_ff, attention heads (or head_dim when heads don't
+    divide), vocab, experts (EP when E divides the axis, else the expert
+    hidden dim);
+  * FSDP ("data" axis): the other large dimension of every big matrix —
+    GSPMD all-gathers weights per scanned layer, the standard ZeRO-3 trade;
+    never across pods (DCN);
+  * scanned ("super"-stacked) leaves get a leading None;
+  * any rule that does not divide the dimension degrades to None (so the
+    same rules serve the (2,4) test mesh and the (16,16) pod).
+
+Every rule is keyed on the leaf's dict-key name — the parameter pytree is
+the schema.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch import mesh as mesh_lib
+
+
+def _div(mesh, axis: str | None, dim: int):
+    """axis if it divides dim, else None (graceful degradation)."""
+    if axis is None:
+        return None
+    size = int(np.prod([mesh.shape[a] for a in (
+        axis if isinstance(axis, tuple) else (axis,))]))
+    return axis if dim % size == 0 else None
+
+
+def param_spec(
+    mesh, cfg: ModelConfig, name: str, shape: tuple[int, ...],
+    scanned: bool,
+) -> P:
+    tp = mesh_lib.tp_axis(mesh)
+    fs = mesh_lib.fsdp_axis(mesh)
+    s = shape[1:] if scanned else shape
+    r = len(s)
+    dv = lambda axis, dim: _div(mesh, axis, dim)
+    spec = None
+
+    if name in ("wg", "wu", "wd"):
+        if r == 3:  # moe expert stack (E, d, f) / (E, f, d)
+            # TP on the expert hidden dim f, FSDP on d (dense-FFN-style).
+            # EP (experts over "model") was measured and rejected: the
+            # dispatch scatter then conflicts with the d contraction and
+            # GSPMD replicates expert activations (EXPERIMENTS.md §Perf).
+            hid = 2 if name in ("wg", "wu") else 1
+            other = 3 - hid
+            spec = [None, None, None]
+            spec[hid] = dv(tp, s[hid])
+            spec[other] = dv(fs, s[other])
+            spec = tuple(spec)
+        elif r == 2:  # dense mlp (d, ff) / (ff, d)
+            spec = ((dv(tp, s[0]), dv(fs, s[1])) if name == "wd"
+                    else (dv(fs, s[0]), dv(tp, s[1])))
+    elif name == "embed" and r == 2:
+        spec = (dv(tp, s[0]), dv(fs, s[1]))
+    elif name == "head" and r == 2:
+        spec = (dv(fs, s[0]), dv(tp, s[1]))
+    elif name == "frontend_proj" and r == 2:
+        spec = (None, dv(tp, s[1]))
+    elif name in ("wq", "wk", "wv") and r == 3:
+        spec = (dv(fs, s[0]), dv(tp, s[1]), None)
+    elif name == "wo" and r == 3:
+        spec = (dv(tp, s[0]), None, dv(fs, s[2]))
+    elif name in ("bq", "bk", "bv") and r == 2:
+        spec = (dv(tp, s[0]), None)
+    elif name == "router" and r == 2:
+        spec = (dv(fs, s[0]), None)
+    elif name == "in_proj" and r == 2:
+        spec = (dv(fs, s[0]), dv(tp, s[1]))
+    elif name == "conv_w" and r == 2:
+        spec = (None, dv(tp, s[1]))
+    elif name in ("conv_b", "dt_bias", "d_skip") and r == 1:
+        spec = (dv(tp, s[0]),)
+    elif name == "x_proj" and r == 2:
+        spec = (dv(tp, s[0]), None)
+    elif name == "dt_proj" and r == 2:
+        spec = (None, dv(tp, s[1]))
+    elif name == "a_log" and r == 2:
+        spec = (dv(tp, s[0]), None)
+    elif name in ("wi", "wf") and r == 2:
+        spec = (dv(fs, s[0]), None)
+    elif name == "out_proj" and r == 2:
+        spec = (dv(tp, s[0]), dv(fs, s[1]))
+    elif name in ("wo_gate", "out") and r == 2:
+        spec = (dv(fs, s[0]), dv(tp, s[1]))
+    elif name == "w_in" and r == 4:
+        spec = (dv(fs, s[0]), None, None, dv(tp, s[3]))
+    elif name == "r" and r == 4:
+        spec = (None, dv(tp, s[1]), None, None)
+
+    if spec is None:  # norms, small biases, unknown leaves: replicated
+        spec = (None,) * r
+    if scanned:
+        spec = (None,) + tuple(spec)
+    return P(*spec)
+
+
+def _named_tree(mesh, cfg, tree, spec_fn):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in leaves:
+        keys = [getattr(p, "key", None) for p in path]
+        name = next(
+            (k for k in reversed(keys) if isinstance(k, str)), ""
+        )
+        scanned = "super" in keys
+        out.append(spec_fn(name, tuple(leaf.shape), scanned))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def param_specs(mesh, cfg: ModelConfig, params_shape) -> Any:
+    """Pytree of PartitionSpecs matching a params (shape) pytree."""
+    return _named_tree(
+        mesh, cfg, params_shape,
+        lambda n, s, sc: param_spec(mesh, cfg, n, s, sc),
+    )
+
+
+def opt_specs(mesh, cfg: ModelConfig, opt_shape) -> Any:
+    """Optimizer moments shard like their parameters; step is replicated."""
+    def fn(n, s, sc):
+        if n == "step" or len(s) == 0:
+            return P()
+        return param_spec(mesh, cfg, n, s, sc)
+
+    return _named_tree(mesh, cfg, opt_shape, fn)
+
+
+def batch_specs(mesh, cfg: ModelConfig, batch_shape) -> Any:
+    """Batch (tokens/labels/features) over the DP axes; if the global batch
+    is too small (long-context cells), shard the sequence axis instead."""
+    dp = mesh_lib.dp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    out = {}
+    for k, v in batch_shape.items():
+        b, s = v.shape[0], v.shape[1]
+        if b % dp_size == 0:
+            out[k] = P(dp if len(dp) > 1 else dp[0], *(None,) * (v.ndim - 1))
+        elif s % dp_size == 0 and v.ndim >= 2:
+            out[k] = P(None, dp if len(dp) > 1 else dp[0],
+                       *(None,) * (v.ndim - 2))
+        else:
+            out[k] = P(*(None,) * v.ndim)
+    return out
+
+
+def cache_specs(mesh, cfg: ModelConfig, cache_shape) -> Any:
+    """Decode caches: batch over DP when divisible; the long axis (KV
+    sequence / d_inner / head_dim) over TP; leading n_super axis unsharded.
+
+    Leaf name conventions: attention k/v (n_super, B, S, KVH, HD); mamba
+    conv/h; mlstm C/n/m; slstm c/n/h/m."""
+    dp = mesh_lib.dp_axes(mesh)
+    tp = mesh_lib.tp_axis(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    dp_spec = dp if len(dp) > 1 else dp[0]
+
+    def fn(name, s, scanned):
+        # s includes the leading n_super axis here (cache trees are stacked)
+        bdim = s[1]
+        bspec = dp_spec if bdim % dp_size == 0 else None
+        rest = [None] * (len(s) - 2)
+        if name in ("k", "v") and len(s) == 5:
+            # (L, B, S_cache, KVH, HD): sequence over model (+data if free)
+            seq_axes = tuple(a for a in ((tp,) if tp else ())
+                             if s[2] % mesh.shape[a] == 0)
+            if bspec is None:
+                both = tuple(list(dp) + [tp]) if tp else dp
+                size = int(np.prod([mesh.shape[a] for a in both]))
+                if s[2] % size == 0:
+                    rest[0] = both
+                elif seq_axes:
+                    rest[0] = seq_axes[0]
+            elif seq_axes:
+                rest[0] = seq_axes[0]
+        elif name in ("conv", "ssm") and len(s) == 4:
+            # mamba conv (L,B,K-1,di) / ssm (L,B,di,n)
+            di_dim = 3 if name == "conv" else 2
+            if tp and s[di_dim] % mesh.shape[tp] == 0:
+                rest[di_dim - 2] = tp
+        elif name in ("C", "n", "m", "c", "h") and tp:
+            # mlstm/slstm states (L,B,H,...): shard trailing head_dim
+            for dim in range(len(s) - 1, 1, -1):
+                if s[dim] % mesh.shape[tp] == 0 and dim >= 3:
+                    rest[dim - 2] = tp
+                    break
+        return P(None, bspec, *rest)
+
+    return _named_tree(mesh, cfg, cache_shape, fn)
+
+
+def to_named(mesh, specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,253 @@
+"""Jitted step builders (train / prefill / serve) + per-cell input specs.
+
+This is the single source of truth for what each (architecture x input
+shape) dry-run cell lowers:
+
+  train_4k    -> train_step   (loss + AdamW update, global_batch=256, S=4096)
+  prefill_32k -> prefill_step (forward + cache build, gb=32, S=32768)
+  decode_32k  -> serve_step   (1 new token against a 32768 KV/state cache,
+                               gb=128, KY token sampling inside the step)
+  long_500k   -> serve_step   (S_cache=524288, gb=1; sub-quadratic archs only)
+
+`abstract_*` functions produce ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, no allocation) for the dry-run; the same builders produce the
+runnable jitted functions for the examples on small meshes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch import mesh as mesh_lib
+from repro.launch import sharding
+from repro.models import sampling as tok_sampling
+from repro.models import transformer as tfm
+from repro.optim import adamw
+
+SHAPE_CELLS = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+def cell_applicable(cfg: ModelConfig, cell: str) -> tuple[bool, str]:
+    if cell == "long_500k" and not cfg.long_context:
+        return False, (
+            "pure full-attention arch: 500k decode requires sub-quadratic "
+            "attention (skip documented in DESIGN.md Sec. 5)"
+        )
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs (dry-run stand-ins)
+# ---------------------------------------------------------------------------
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda k: tfm.init_model(k, cfg), jax.random.PRNGKey(0)
+    )
+
+
+def abstract_batch(cfg: ModelConfig, seq: int, batch: int) -> dict[str, Any]:
+    front = cfg.frontend_len if cfg.frontend else 0
+    out = {
+        "tokens": jax.ShapeDtypeStruct((batch, seq - front), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+    }
+    if cfg.frontend:
+        out["features"] = jax.ShapeDtypeStruct(
+            (batch, front, tfm.FRONTEND_DIM), jnp.float32
+        )
+    return out
+
+
+def abstract_caches(cfg: ModelConfig, batch: int, s_max: int):
+    return jax.eval_shape(
+        functools.partial(tfm.init_decode_caches, cfg, batch, s_max)
+    )
+
+
+def abstract_opt_state(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig):
+    params = abstract_params(cfg)
+    return jax.eval_shape(functools.partial(adamw.init, cfg=opt_cfg), params)
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+
+def act_partition(mesh, cfg: ModelConfig, batch_dim: int) -> P | None:
+    """Residual-stream (B, S, d) constraint: batch over DP, d over TP."""
+    if mesh is None:
+        return None
+    dp = mesh_lib.dp_axes(mesh)
+    tp = mesh_lib.tp_axis(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    b_ax = (dp if len(dp) > 1 else dp[0]) if batch_dim % dp_size == 0 else None
+    d_ax = tp if tp and cfg.d_model % mesh.shape[tp] == 0 else None
+    return P(b_ax, None, d_ax)
+
+
+def _set_moe_ctx(mesh) -> None:
+    """In-layer MoE sharding constraints need the mesh axes at trace time."""
+    from repro.models import moe as moe_mod
+
+    if mesh is None:
+        moe_mod.clear_moe_mesh()
+        return
+    tp = mesh_lib.tp_axis(mesh)
+    moe_mod.set_moe_mesh(
+        mesh_lib.dp_axes(mesh), tp, mesh.shape[tp] if tp else 1
+    )
+
+
+def default_opt_cfg(cfg: ModelConfig) -> adamw.AdamWConfig:
+    # bf16 moments when the f32 optimizer would not fit a 16 GB chip
+    moment = "bfloat16" if cfg.n_params() > 2e11 else "float32"
+    return adamw.AdamWConfig(moment_dtype=moment)
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    mesh,
+    opt_cfg: adamw.AdamWConfig | None = None,
+    remat_policy: str = "nothing",
+    jit: bool = True,
+):
+    """Returns (step_fn, shardings dict).  step_fn(params, opt_state, batch)
+    -> (params, opt_state, metrics)."""
+    opt_cfg = opt_cfg or default_opt_cfg(cfg)
+
+    aspec = None
+
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: tfm.train_loss(p, cfg, batch,
+                                     remat_policy=remat_policy,
+                                     act_spec=aspec)
+        )(params)
+        params, opt_state, metrics = adamw.update(
+            params, grads, opt_state, opt_cfg
+        )
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    if mesh is None:
+        return (jax.jit(step, donate_argnums=(0, 1)) if jit else step), None
+
+    pspecs = sharding.param_specs(mesh, cfg, abstract_params(cfg))
+    ospecs = sharding.opt_specs(mesh, cfg,
+                                abstract_opt_state(cfg, opt_cfg))
+    shardings = {"params": pspecs, "opt": ospecs}
+
+    def with_batch(batch_shape):
+        nonlocal aspec
+        aspec = act_partition(mesh, cfg, batch_shape["tokens"].shape[0])
+        _set_moe_ctx(mesh)
+        bspecs = sharding.batch_specs(mesh, cfg, batch_shape)
+        fn = jax.jit(
+            step,
+            in_shardings=(
+                sharding.to_named(mesh, pspecs),
+                sharding.to_named(mesh, ospecs),
+                sharding.to_named(mesh, bspecs),
+            ),
+            out_shardings=(
+                sharding.to_named(mesh, pspecs),
+                sharding.to_named(mesh, ospecs),
+                None,
+            ),
+            donate_argnums=(0, 1),
+        )
+        return fn, bspecs
+
+    return with_batch, shardings
+
+
+def make_prefill_step(cfg: ModelConfig, mesh):
+    aspec = None
+
+    def step(params, batch):
+        return tfm.prefill(params, cfg, batch, act_spec=aspec)
+
+    if mesh is None:
+        return jax.jit(step)
+
+    pspecs = sharding.param_specs(mesh, cfg, abstract_params(cfg))
+
+    def with_batch(batch_shape):
+        nonlocal aspec
+        aspec = act_partition(mesh, cfg, batch_shape["tokens"].shape[0])
+        _set_moe_ctx(mesh)
+        bspecs = sharding.batch_specs(mesh, cfg, batch_shape)
+        return jax.jit(
+            step,
+            in_shardings=(
+                sharding.to_named(mesh, pspecs),
+                sharding.to_named(mesh, bspecs),
+            ),
+        )
+
+    return with_batch
+
+
+def make_serve_step(
+    cfg: ModelConfig, mesh, sampler: str = "ky"
+):
+    """serve_step(params, tokens (B,1), caches, pos, key) ->
+    (next_tokens (B,), logits (B,V), caches).  Token sampling (the paper's
+    C1+C2 pipeline for sampler='ky') happens INSIDE the step."""
+
+    def step(params, tokens, caches, pos, key):
+        logits, caches = tfm.decode_step(params, cfg, tokens, caches, pos)
+        if sampler == "greedy":
+            toks = tok_sampling.greedy_token(logits)
+        else:
+            toks = tok_sampling.sample_tokens(logits, key, sampler)
+        return toks, logits, caches
+
+    if mesh is None:
+        return jax.jit(step, donate_argnums=(2,))
+
+    pspecs = sharding.param_specs(mesh, cfg, abstract_params(cfg))
+
+    def with_caches(cache_shape, batch: int):
+        _set_moe_ctx(mesh)
+        cspecs = sharding.cache_specs(mesh, cfg, cache_shape)
+        dp = mesh_lib.dp_axes(mesh)
+        dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+        tok_spec = P(dp if len(dp) > 1 else dp[0], None) \
+            if batch % dp_size == 0 else P(None, None)
+        out_tok = P(tok_spec[0]) if batch % dp_size == 0 else P(None)
+        fn = jax.jit(
+            step,
+            in_shardings=(
+                sharding.to_named(mesh, pspecs),
+                NamedSharding(mesh, tok_spec),
+                sharding.to_named(mesh, cspecs),
+                None,
+                None,
+            ),
+            out_shardings=(
+                NamedSharding(mesh, out_tok),
+                None,
+                sharding.to_named(mesh, cspecs),
+            ),
+            donate_argnums=(2,),
+        )
+        return fn, cspecs
+
+    return with_caches

@@ -1,0 +1,392 @@
+"""Transformer substrate: RMSNorm, RoPE, flash attention (pure JAX, online
+softmax over KV chunks), GQA attention blocks (train/prefill/decode), SwiGLU.
+
+Memory posture: prefill at 32k would materialize (B, H, S, S) scores with a
+naive einsum — 25+ GB/device for the large archs — so training/prefill always
+runs the double-chunked flash path (scan over KV chunks, f32 running max/sum).
+Decode (S_q = 1) uses the direct masked einsum over the cache.
+
+Chunked-local attention (llama4 iRoPE style) is the same kernel with an
+extra same-chunk mask term; global (non-chunked) layers can opt out of RoPE
+(`rope_on_global=False`) per iRoPE.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Params = dict[str, Any]
+NEG_INF = -1e30
+
+
+def init_dense(key, in_dim: int, out_shape: tuple[int, ...], dtype) -> jax.Array:
+    scale = 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim,) + out_shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x (..., S, H, D), positions (..., S) -> rotated x (half-split layout)."""
+    d_half = x.shape[-1] // 2
+    freqs = theta ** (-jnp.arange(0, d_half, dtype=jnp.float32) / d_half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, d/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :d_half], x[..., d_half:]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention (pure JAX): scan over KV chunks with online softmax
+# ---------------------------------------------------------------------------
+
+
+def _pick_chunk(s: int, target: int) -> int:
+    """Largest power-of-two divisor of s, capped at target."""
+    c = 1
+    while c < target and s % (2 * c) == 0:
+        c *= 2
+    return c if s % c == 0 else s
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(
+    q: jax.Array,  # (B, Sq, H, D), already scaled & roped
+    k: jax.Array,  # (B, Skv, KVH, D)
+    v: jax.Array,  # (B, Skv, KVH, D)
+    q_offset: int = 0,  # absolute position of q[0]
+    window: int = 0,  # >0: chunked-local attention (same-chunk mask)
+    q_chunk: int = 512,
+    kv_chunk: int = 512,
+) -> jax.Array:
+    """Online-softmax attention with a hand-written VJP.
+
+    The forward scans KV chunks carrying (m, l, acc); the custom backward
+    recomputes probabilities per chunk from the saved log-sum-exp instead of
+    letting autodiff checkpoint the per-chunk carries (which would cost
+    O(S/kv_chunk) copies of the output — hundreds of GiB at 32k prefill;
+    measured in the dry-run before this fix).  Residuals are O(B·S·H·D):
+    q, k, v, out, lse — the flash-attention trade, TPU-adapted in pure JAX.
+    """
+    out, _ = _flash_fwd_impl(q, k, v, q_offset, window, q_chunk, kv_chunk)
+    return out
+
+
+def _flash_geom(q, k, q_chunk, kv_chunk):
+    b, sq, h, d = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qc = _pick_chunk(sq, min(q_chunk, sq))
+    kc = _pick_chunk(skv, min(kv_chunk, skv))
+    return b, sq, h, d, skv, kvh, g, qc, kc
+
+
+def _mask_for(q_pos, k_pos, window):
+    """q_pos (nq, qc), k_pos (kc,) -> (nq, qc, kc) bool."""
+    mask = q_pos[:, :, None] >= k_pos[None, None, :]
+    if window:
+        mask &= (q_pos[:, :, None] // window) == (k_pos[None, None, :]
+                                                  // window)
+    return mask
+
+
+def _flash_fwd_impl(q, k, v, q_offset, window, q_chunk, kv_chunk):
+    b, sq, h, d, skv, kvh, g, qc, kc = _flash_geom(q, k, q_chunk, kv_chunk)
+    nq, nk = sq // qc, skv // kc
+    qr = q.reshape(b, nq, qc, kvh, g, d)
+    kr = k.reshape(b, nk, kc, kvh, d)
+    vr = v.reshape(b, nk, kc, kvh, d)
+    q_pos = q_offset + jnp.arange(sq).reshape(nq, qc)
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        k_c, v_c, kpos = inputs  # (b, kc, kvh, d), (kc,)
+        s = jnp.einsum("bnqhgd,bkhd->bnqhgk", qr, k_c,
+                       preferred_element_type=jnp.float32)
+        mask = _mask_for(q_pos, kpos, window)
+        s = jnp.where(mask[None, :, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bnqhgk,bkhd->bnqhgd", p.astype(v_c.dtype), v_c,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * alpha[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, nq, qc, kvh, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, nq, qc, kvh, g), jnp.float32)
+    a0 = jnp.zeros((b, nq, qc, kvh, g, d), jnp.float32)
+    kv_pos = jnp.arange(skv).reshape(nk, kc)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (kr.swapaxes(0, 1), vr.swapaxes(0, 1), kv_pos),
+    )
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))  # (b, nq, qc, kvh, g)
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, sq, h, d).astype(q.dtype), lse
+
+
+def _flash_fwd(q, k, v, q_offset, window, q_chunk, kv_chunk):
+    out, lse = _flash_fwd_impl(q, k, v, q_offset, window, q_chunk, kv_chunk)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(q_offset, window, q_chunk, kv_chunk, res, dout):
+    q, k, v, out, lse = res
+    b, sq, h, d, skv, kvh, g, qc, kc = _flash_geom(q, k, q_chunk, kv_chunk)
+    nq, nk = sq // qc, skv // kc
+    qr = q.reshape(b, nq, qc, kvh, g, d)
+    kr = k.reshape(b, nk, kc, kvh, d).swapaxes(0, 1)
+    vr = v.reshape(b, nk, kc, kvh, d).swapaxes(0, 1)
+    dor = dout.reshape(b, nq, qc, kvh, g, d).astype(jnp.float32)
+    our = out.reshape(b, nq, qc, kvh, g, d).astype(jnp.float32)
+    q_pos = q_offset + jnp.arange(sq).reshape(nq, qc)
+    kv_pos = jnp.arange(skv).reshape(nk, kc)
+    delta = jnp.sum(dor * our, axis=-1)  # (b, nq, qc, kvh, g)
+
+    def step(dq, inputs):
+        k_c, v_c, kpos = inputs
+        s = jnp.einsum("bnqhgd,bkhd->bnqhgk", qr, k_c,
+                       preferred_element_type=jnp.float32)
+        mask = _mask_for(q_pos, kpos, window)
+        s = jnp.where(mask[None, :, :, None, None, :], s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])  # exact probabilities
+        dp = jnp.einsum("bnqhgd,bkhd->bnqhgk", dor, v_c,
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[..., None])
+        dq = dq + jnp.einsum("bnqhgk,bkhd->bnqhgd", ds, k_c,
+                             preferred_element_type=jnp.float32)
+        dk_c = jnp.einsum("bnqhgk,bnqhgd->bkhd", ds, qr,
+                          preferred_element_type=jnp.float32)
+        dv_c = jnp.einsum("bnqhgk,bnqhgd->bkhd", p, dor,
+                          preferred_element_type=jnp.float32)
+        return dq, (dk_c, dv_c)
+
+    dq0 = jnp.zeros((b, nq, qc, kvh, g, d), jnp.float32)
+    dq, (dk, dv) = jax.lax.scan(step, dq0, (kr, vr, kv_pos))
+    dk = dk.swapaxes(0, 1).reshape(b, skv, kvh, d).astype(k.dtype)
+    dv = dv.swapaxes(0, 1).reshape(b, skv, kvh, d).astype(v.dtype)
+    dq = dq.reshape(b, sq, h, d).astype(q.dtype)
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+def attention_reference(q, k, v, *, q_offset=0, window=0):
+    """Naive oracle for flash_attention (test use only)."""
+    b, sq, h, d = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qr = q.reshape(b, sq, kvh, g, d)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qr, k).astype(jnp.float32)
+    q_pos = q_offset + jnp.arange(sq)
+    k_pos = jnp.arange(k.shape[1])
+    mask = q_pos[:, None] >= k_pos[None, :]
+    if window:
+        mask &= (q_pos[:, None] // window) == (k_pos[None, :] // window)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v)
+    return o.reshape(b, sq, h, d)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block
+# ---------------------------------------------------------------------------
+
+
+def head_geometry(cfg: ModelConfig):
+    """(hp, kvp, g_pad, q_head_mask) — padded-head layout for clean TP.
+
+    With attn_pad_heads set, query heads are padded group-major (each KV
+    group gains pad slots) so GQA group assignment is unchanged; pad heads
+    are masked to zero after attention, keeping the math identical to the
+    unpadded architecture while letting the head axis divide the mesh."""
+    h, kvh, pad = cfg.n_heads, cfg.n_kv_heads, cfg.attn_pad_heads
+    if not pad or pad == h:
+        return h, kvh, h // kvh, None
+    if kvh == h:  # MHA: pad q and kv together
+        mask = (jnp.arange(pad) < h)
+        return pad, pad, 1, mask
+    assert pad % kvh == 0, "pad must preserve KV grouping"
+    g, g_pad = h // kvh, pad // kvh
+    mask = (jnp.arange(pad) % g_pad) < g
+    return pad, kvh, g_pad, mask
+
+
+def init_attention(key, cfg: ModelConfig) -> Params:
+    d, hd = cfg.d_model, cfg.hd
+    hp, kvp, _, _ = head_geometry(cfg)
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": init_dense(ks[0], d, (hp, hd), dt),
+        "wk": init_dense(ks[1], d, (kvp, hd), dt),
+        "wv": init_dense(ks[2], d, (kvp, hd), dt),
+        "wo": init_dense(ks[3], hp * hd, (d,), dt).reshape(hp, hd, d),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hp, hd), dt)
+        p["bk"] = jnp.zeros((kvp, hd), dt)
+        p["bv"] = jnp.zeros((kvp, hd), dt)
+    return p
+
+
+def _qkv(p: Params, x: jax.Array, cfg: ModelConfig):
+    dt = cfg.act_dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    return q, k, v
+
+
+def attention_apply(
+    p: Params,
+    x: jax.Array,  # (B, S, d)
+    cfg: ModelConfig,
+    *,
+    kind: str,
+    positions: jax.Array,  # (S,)
+    q_offset=0,
+) -> tuple[jax.Array, Params]:
+    """Training / prefill path.  Returns (out, cache) — cache holds the roped
+    k and raw v for decode continuation."""
+    dt = cfg.act_dtype
+    q, k, v = _qkv(p, x, cfg)
+    use_rope = kind == "attn_chunked" or cfg.rope_on_global
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    q = q * (1.0 / math.sqrt(cfg.hd))
+    window = cfg.chunk_size if kind == "attn_chunked" else 0
+    # GQA under TP: repeat K/V to full head count so the head axis shards
+    # cleanly over "model" — the (kvh, g) factorized reshape defeats the
+    # SPMD propagator and replicates the whole attention computation
+    # (measured 16x FLOP inflation in the dry-run before this change).
+    hp, kvp, g_pad, qmask = head_geometry(cfg)
+    kr = jnp.repeat(k, g_pad, axis=2) if g_pad > 1 else k
+    vr = jnp.repeat(v, g_pad, axis=2) if g_pad > 1 else v
+    # positional: custom_vjp nondiff args cannot be keywords
+    o = flash_attention(q, kr, vr, q_offset, window)
+    if qmask is not None:
+        o = o * qmask[None, None, :, None].astype(o.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(dt))
+    return out, {"k": k, "v": v}
+
+
+def attention_decode(
+    p: Params,
+    x: jax.Array,  # (B, 1, d)
+    cache: Params,  # {"k","v": (B, S_max, KVH, D)}
+    pos: jax.Array,  # scalar: absolute position of the new token
+    cfg: ModelConfig,
+    *,
+    kind: str,
+) -> tuple[jax.Array, Params]:
+    dt = cfg.act_dtype
+    q, k, v = _qkv(p, x, cfg)
+    use_rope = kind == "attn_chunked" or cfg.rope_on_global
+    pos_arr = jnp.full((1,), pos, jnp.int32)
+    if use_rope:
+        q = rope(q, pos_arr, cfg.rope_theta)
+        k = rope(k, pos_arr, cfg.rope_theta)
+    q = q * (1.0 / math.sqrt(cfg.hd))
+
+    s_max = cache["k"].shape[1]
+    slot = pos % s_max if kind == "attn_chunked" else pos
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+
+    hp, kvp, g_pad, qmask = head_geometry(cfg)
+    b, _, h, d = q.shape
+    kvh = ck.shape[2]
+    g = h // kvh
+    qr = q.reshape(b, kvh, g, d)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qr, ck,
+                   preferred_element_type=jnp.float32)
+    if kind == "attn_chunked":
+        # ring cache of one window; valid entries share the query's chunk
+        k_pos = pos - ((pos - jnp.arange(s_max)) % s_max)
+        mask = (k_pos >= 0) & (k_pos // cfg.chunk_size == pos // cfg.chunk_size)
+    else:
+        mask = jnp.arange(s_max) <= pos
+    s = jnp.where(mask[None, None, None, :], s, NEG_INF)
+    pattn = jax.nn.softmax(s, axis=-1).astype(dt)
+    o = jnp.einsum("bhgk,bkhd->bhgd", pattn, cv)
+    if qmask is not None:
+        o = o * qmask.reshape(kvh, g, 1).astype(o.dtype)[None]
+    o = o.reshape(b, 1, h * d)
+    out = jnp.einsum(
+        "bsx,xd->bsd", o, p["wo"].astype(dt).reshape(h * d, cfg.d_model)
+    )
+    return out, {"k": ck, "v": cv}
+
+
+def init_attn_cache(cfg: ModelConfig, batch: int, s_max: int, kind: str):
+    if kind == "attn_chunked":
+        s_max = min(s_max, cfg.chunk_size)
+    kvp = head_geometry(cfg)[1]
+    shape = (batch, s_max, kvp, cfg.hd)
+    return {
+        "k": jnp.zeros(shape, cfg.act_dtype),
+        "v": jnp.zeros(shape, cfg.act_dtype),
+    }
+
+
+def ring_from_prefill(kv: jax.Array, w: int, axis: int = 1) -> jax.Array:
+    """Arrange the last min(S, w) prefilled K/V entries into the ring-cache
+    slot order used by attention_decode (slot = pos % w)."""
+    s = kv.shape[axis]
+    if s <= w:
+        pad = [(0, 0)] * kv.ndim
+        pad[axis] = (0, w - s)
+        return jnp.pad(kv, pad)
+    tail = jax.lax.slice_in_dim(kv, s - w, s, axis=axis)
+    return jnp.roll(tail, shift=(s - w) % w, axis=axis)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None) -> Params:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    return {
+        "wg": init_dense(ks[0], d, (ff,), dt),
+        "wu": init_dense(ks[1], d, (ff,), dt),
+        "wd": init_dense(ks[2], ff, (d,), dt),
+    }
+
+
+def mlp_apply(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    dt = cfg.act_dtype
+    gate = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["wg"].astype(dt)))
+    up = jnp.einsum("bsd,df->bsf", x, p["wu"].astype(dt))
+    return jnp.einsum("bsf,fd->bsd", gate * up, p["wd"].astype(dt))

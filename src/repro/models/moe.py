@@ -1,0 +1,189 @@
+"""Mixture-of-Experts FFN: top-k routing with sort-based capacity dispatch.
+
+Routing is the static-shape, SPMD-friendly formulation:
+
+  1. router logits -> softmax -> top-k (probs renormalized over the chosen k);
+  2. the (tokens x k) assignments are sorted by expert id and packed into an
+     (E, C, d) buffer with capacity C = ceil(T*k/E * capacity_factor)
+     (overflow tokens are dropped — Switch-style — and contribute their
+     residual stream unchanged);
+  3. per-expert SwiGLU as one (E, C, d) x (E, d, f) grouped einsum — the
+     expert dimension shards over the "model" axis (expert parallelism) when
+     E divides the axis, otherwise the f dimension shards (tensor
+     parallelism); decided by the sharding rules, not here;
+  4. results scatter back and combine with the routing weights;
+  5. optional shared experts run densely over all tokens (qwen2-moe/llama4).
+
+Also returns the switch load-balancing auxiliary loss.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models.layers import Params, init_dense
+
+# Mesh context for in-layer sharding constraints (set by launch.steps when
+# building distributed step functions; None on single-device paths).
+# Without the constraints GSPMD contracts the FSDP-sharded weight dim and
+# replicates the (b, e, cap, f) expert activations over "data" — a measured
+# 30 GiB all-reduce per MoE layer at jamba scale (EXPERIMENTS.md §Perf it.3).
+_MESH_CTX: dict = {"dp": None, "tp": None, "tp_size": 1}
+
+
+def set_moe_mesh(dp_axes, tp_axis, tp_size: int) -> None:
+    _MESH_CTX.update(dp=dp_axes, tp=tp_axis, tp_size=int(tp_size))
+
+
+def clear_moe_mesh() -> None:
+    _MESH_CTX.update(dp=None, tp=None, tp_size=1)
+
+
+def _wsc(x, *axes):
+    if _MESH_CTX["dp"] is None:
+        return x
+    spec = P(*axes, *([None] * (x.ndim - len(axes))))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def _dp():
+    dp = _MESH_CTX["dp"]
+    return dp if dp is None or len(dp) > 1 else dp[0]
+
+
+def _tp_div(dim: int):
+    tp = _MESH_CTX["tp"]
+    return tp if tp and dim % _MESH_CTX["tp_size"] == 0 else None
+
+
+def init_moe(key, cfg: ModelConfig, moe: MoEConfig) -> Params:
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    e, f = moe.n_experts, moe.d_expert
+
+    def expert_stack(k, in_dim, shape):
+        kk = jax.random.split(k, e)
+        return jnp.stack([init_dense(kk[i], in_dim, shape, dt) for i in range(e)])
+
+    p = {
+        "router": init_dense(ks[0], d, (e,), dt),
+        "wg": expert_stack(ks[1], d, (f,)),
+        "wu": expert_stack(ks[2], d, (f,)),
+        "wd": expert_stack(ks[3], f, (d,)),
+    }
+    if moe.d_shared:
+        from repro.models.layers import init_mlp
+
+        p["shared"] = init_mlp(ks[4], cfg, d_ff=moe.d_shared)
+    return p
+
+
+def moe_apply(
+    p: Params, x: jax.Array, cfg: ModelConfig, moe: MoEConfig
+) -> tuple[jax.Array, jax.Array]:
+    """x (B, S, d) -> (out (B, S, d), aux_loss scalar).
+
+    Dispatch is PER BATCH ROW (Mesh-TF "group" = row): every sort/scatter/
+    gather carries the leading B axis, so the data-parallel sharding of B
+    survives routing and no global token all-gather is ever materialized.
+    (The earlier global-token argsort forced GSPMD to replicate the full
+    (B*S, d) activation on every device — 10-17 GiB/layer at llama4/jamba
+    scale, measured in the dry-run; see EXPERIMENTS.md §Perf iteration 1.)
+    """
+    dt = cfg.act_dtype
+    b, s, d = x.shape
+    e, k = moe.n_experts, moe.top_k
+
+    if s == 1 and b > 1:
+        # Decode: per-row dispatch would compute E*cap slots per single
+        # token (measured 60x useless FLOPs in the dry-run); route the whole
+        # batch as ONE group instead — the (b, d) activation is tiny, so the
+        # global sort costs nothing.  In-layer dp constraints are disabled
+        # (the group axis has size 1).
+        saved = dict(_MESH_CTX)
+        _MESH_CTX.update(dp=None)
+        try:
+            y, aux = moe_apply(p, x.transpose(1, 0, 2), cfg, moe)
+        finally:
+            _MESH_CTX.update(saved)
+        return y.transpose(1, 0, 2), aux
+
+    logits = jnp.einsum("bsd,de->bse", x, p["router"].astype(dt))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)  # (b, s, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # switch aux loss: fraction of tokens per expert x mean router prob
+    density = jnp.mean(
+        (top_i[..., None] == jnp.arange(e)).any(axis=2).astype(jnp.float32),
+        axis=(0, 1),
+    )
+    aux = moe.router_aux_weight * e * jnp.sum(density * probs.mean((0, 1)))
+
+    # ---- per-row sort-based dispatch --------------------------------------
+    n_assign = s * k
+    cap = int(-(-s * k // e) * moe.capacity_factor)
+    cap = max(4, -(-cap // 4) * 4)
+    flat_e = top_i.reshape(b, n_assign)
+    flat_w = top_p.reshape(b, n_assign).astype(dt)
+    flat_tok = jnp.tile(jnp.repeat(jnp.arange(s), k)[None], (b, 1))
+
+    order = jnp.argsort(flat_e, axis=-1)
+    se = jnp.take_along_axis(flat_e, order, axis=-1)
+    sw = jnp.take_along_axis(flat_w, order, axis=-1)
+    stok = jnp.take_along_axis(flat_tok, order, axis=-1)
+    # position within my expert's run: searchsorted per row (vmapped)
+    first = jax.vmap(
+        lambda row: jnp.searchsorted(row, row, side="left")
+    )(se)
+    pos = jnp.arange(n_assign)[None] - first
+    keep = pos < cap
+    slot = jnp.where(keep, se * cap + pos, e * cap)  # OOB -> dropped
+
+    # Layout dance (see EXPERIMENTS.md §Perf): scatter/gather run with d
+    # TP-sharded (fully local); d is all-gathered only at the expert matmul
+    # (2.7 GiB bf16 transient at jamba scale); the expert hidden dim f is
+    # the TP dim of the expert weights (dense-FFN-style), and out_e is
+    # constrained back to d@tp so XLA emits a reduce-scatter, not a 30 GiB
+    # replicated all-reduce.
+    dp, tp_d = _dp(), _tp_div(d)
+    f_dim = moe.d_expert
+    xt = jnp.take_along_axis(
+        x, stok[..., None], axis=1
+    )  # (b, n_assign, d) routed-token activations
+    xt = _wsc(xt, dp, None, tp_d)
+    buf = jnp.zeros((b, e * cap, d), dt)
+    buf = jax.vmap(
+        lambda bb, sl, xx: bb.at[sl].set(xx, mode="drop")
+    )(buf, slot, xt)
+    buf = _wsc(buf, dp, None, tp_d)
+    h = _wsc(buf.reshape(b, e, cap, d), dp, None, None, None)  # d gathered
+    gate = jax.nn.silu(
+        jnp.einsum("becd,edf->becf", h, p["wg"].astype(dt))
+    )
+    up = jnp.einsum("becd,edf->becf", h, p["wu"].astype(dt))
+    gate = _wsc(gate, dp, None, None, _tp_div(f_dim))
+    up = _wsc(up, dp, None, None, _tp_div(f_dim))
+    out_e = jnp.einsum("becf,efd->becd", gate * up, p["wd"].astype(dt))
+    out_e = _wsc(out_e, dp, None, None, tp_d)  # reduce-scatter on d
+
+    flat_out = out_e.reshape(b, e * cap, d)
+    gathered = jnp.take_along_axis(
+        flat_out, jnp.minimum(slot, e * cap - 1)[..., None], axis=1
+    )
+    gathered = gathered * (keep & (sw > 0))[..., None].astype(dt) \
+        * sw[..., None]
+    y = jnp.zeros((b, s, d), dt)
+    y = jax.vmap(lambda yy, tk, gg: yy.at[tk].add(gg))(y, stok, gathered)
+    y = _wsc(y, dp, None, tp_d)
+
+    if "shared" in p:
+        from repro.models.layers import mlp_apply
+
+        y = y + mlp_apply(p["shared"], x, cfg)
+    return y, aux

@@ -1,0 +1,106 @@
+"""Token sampling — the paper's technique as a first-class serving feature.
+
+`ky` mode is the AIA pipeline C2->C1 applied to LM logits:
+
+    logits -> max-subtract -> LUT-exp (16-entry, 8-bit integer weights)
+           -> hierarchical rejection-KY draw (128-ary tree over the vocab)
+
+No softmax and no normalization anywhere: the draw is exact for the
+quantized weights, costs O(H) random bits per token (entropy-adaptive, the
+paper's Fig. 11 claim), and the integer group-sums are exact so the
+hierarchical decomposition P(group)·P(token|group) introduces zero bias.
+Large vocabularies (up to 202k here) exceed the paper's 32-bin sampler; the
+128-ary hierarchy is the TPU-lane-width generalization of the paper's
+"sample from 2/4/8/16 distributions in parallel" packing trick.
+
+`gumbel` (one argmax over logits+noise) is the beyond-paper TPU-native
+baseline benchmarked against it; `greedy` for determinism.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ky as ky_core
+from repro.core.interp import LUTSpec, build_exp_weight_lut, interp_ref
+
+BRANCH = 128  # tree arity == TPU lane width
+
+
+def ky_token_sample(
+    logits: jax.Array,
+    key: jax.Array,
+    *,
+    exp_table: jax.Array | None = None,
+    exp_spec: LUTSpec | None = None,
+    max_retries: int = 8,
+) -> jax.Array:
+    """logits (B, V) -> sampled token ids (B,) int32."""
+    if exp_table is None:
+        exp_table, exp_spec = build_exp_weight_lut()
+    b, v = logits.shape
+    z = logits.astype(jnp.float32)
+    z = z - jax.lax.stop_gradient(z.max(axis=-1, keepdims=True))
+    w = jnp.maximum(jnp.round(interp_ref(z, exp_table, exp_spec)), 0.0)
+    w = w.astype(jnp.int32)
+
+    # build the integer-sum pyramid (leaf -> root), exact in int32
+    pad = (-v) % BRANCH
+    levels = [jnp.pad(w, ((0, 0), (0, pad)))]
+    while levels[-1].shape[-1] > BRANCH:
+        cur = levels[-1]
+        grp = cur.reshape(b, -1, BRANCH).sum(-1)
+        gpad = (-grp.shape[-1]) % BRANCH
+        levels.append(jnp.pad(grp, ((0, 0), (0, gpad))))
+
+    # draw root -> leaf; each level is one <=128-bin rejection-KY walk
+    n_levels = len(levels)
+    keys = jax.random.split(key, n_levels)
+    # root: whole top level is one distribution
+    top = levels[-1]
+    precision = min(30, 8 + 7 * n_levels + 2)
+    idx = _ky_draw(top, keys[-1], precision, max_retries)
+    for li in range(n_levels - 2, -1, -1):
+        rows = levels[li].reshape(b, -1, BRANCH)
+        row = jnp.take_along_axis(rows, idx[:, None, None], axis=1)[:, 0]
+        sub = _ky_draw(row, keys[li], min(30, 8 + 7 * (li + 1) + 2),
+                       max_retries)
+        idx = idx * BRANCH + sub
+    return jnp.minimum(idx, v - 1)
+
+
+def _ky_draw(weights: jax.Array, key, precision: int, max_retries: int):
+    b, n = weights.shape
+    n_words = -(-precision * max_retries // 32)
+    words = ky_core.random_words(key, (b,), n_words)
+    labels, _ = ky_core.ky_sample_ref(
+        weights, words, n_bins=n, precision=precision,
+        max_retries=max_retries,
+    )
+    return labels
+
+
+def gumbel_token_sample(logits: jax.Array, key: jax.Array) -> jax.Array:
+    g = jax.random.gumbel(key, logits.shape, jnp.float32)
+    return jnp.argmax(logits.astype(jnp.float32) + g, axis=-1).astype(
+        jnp.int32
+    )
+
+
+def greedy_token(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def sample_tokens(
+    logits: jax.Array, key: jax.Array, method: str = "ky", **kw
+) -> jax.Array:
+    if method == "ky":
+        return ky_token_sample(logits, key, **kw)
+    if method == "gumbel":
+        return gumbel_token_sample(logits, key)
+    if method == "greedy":
+        return greedy_token(logits)
+    raise ValueError(method)

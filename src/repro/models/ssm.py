@@ -1,0 +1,147 @@
+"""Mamba selective-SSM block (Jamba's sequence mixer).
+
+Training/prefill runs a chunked scan: an outer `lax.scan` over sequence
+chunks carrying the (B, d_inner, n_state) recurrent state, an inner scan over
+the positions of one chunk.  This bounds live memory to one chunk of
+discretized parameters instead of the full (B, S, d_inner, n_state)
+materialization (which would be terabytes at Jamba scale), while staying a
+single fused HLO loop for the compiler.  Decode reuses the identical
+single-position step function, so train/decode equivalence is testable.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params, init_dense
+
+CHUNK = 64
+
+
+def init_mamba(key, cfg: ModelConfig) -> Params:
+    d, di, n, r = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    a = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32), (di, 1))
+    return {
+        "in_proj": init_dense(ks[0], d, (2 * di,), dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, di), jnp.float32)
+                   / math.sqrt(cfg.ssm_conv)).astype(dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": init_dense(ks[2], di, (r + 2 * n,), dt),
+        "dt_proj": init_dense(ks[3], r, (di,), dt),
+        "dt_bias": jnp.full((di,), -4.6, dt),  # softplus^-1(0.01)
+        "a_log": jnp.log(a),  # f32: continuous-time decay
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": init_dense(ks[4], di, (d,), dt),
+    }
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int):
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner),
+                          cfg.act_dtype),
+        "ssm": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+    }
+
+
+def _ssm_step(h, x_t, dt_t, b_t, c_t, a):
+    """One recurrence step.  h (B, di, n) f32; x_t, b_t, c_t bf16;
+    dt_t (B, di) f32; a (di, n) negative f32.  Returns (h_new, y_t)."""
+    da = jnp.exp(dt_t[..., None] * a[None])  # (B, di, n)
+    drive = (dt_t * x_t.astype(jnp.float32))[..., None] \
+        * b_t.astype(jnp.float32)[:, None, :]
+    h = h * da + drive
+    y = jnp.sum(h * c_t.astype(jnp.float32)[:, None, :], axis=-1)
+    return h, y
+
+
+def _pre_scan(p: Params, x: jax.Array, cfg: ModelConfig, conv_tail):
+    """Everything before the recurrence: in_proj, causal depthwise conv,
+    silu, parameter projections.  conv_tail (B, K-1, di) is the carry-in for
+    decode/prefill continuation.  Returns (xs, dts, bs, cs, z, new_tail)."""
+    dt = cfg.act_dtype
+    di, n, r, kconv = cfg.d_inner, cfg.ssm_state, cfg.dt_rank, cfg.ssm_conv
+    xz = jnp.einsum("bsd,dk->bsk", x, p["in_proj"].astype(dt))
+    xs, z = xz[..., :di], xz[..., di:]
+    ext = jnp.concatenate([conv_tail, xs], axis=1)  # (B, K-1+S, di)
+    new_tail = ext[:, -(kconv - 1):] if kconv > 1 else ext[:, :0]
+    conv = sum(
+        p["conv_w"][j].astype(dt)
+        * jax.lax.dynamic_slice_in_dim(ext, j, xs.shape[1], axis=1)
+        for j in range(kconv)
+    )
+    xs = jax.nn.silu(conv + p["conv_b"].astype(dt))
+    dbl = jnp.einsum("bsi,ik->bsk", xs, p["x_proj"].astype(dt))
+    dt_r, b, c = dbl[..., :r], dbl[..., r:r + n], dbl[..., r + n:]
+    dts = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dt_r, p["dt_proj"].astype(dt)).astype(
+            jnp.float32
+        )
+        + p["dt_bias"].astype(jnp.float32)
+    )
+    # xs/b/c stay bf16 (they only enter elementwise products); dts stays
+    # f32 (softplus/exp decay precision).  Halves the mamba pre-scan
+    # footprint at jamba scale (4x 268 MB/layer -> 2x, measured).
+    return (xs, dts, b, c, z, new_tail)
+
+
+def mamba_apply(
+    p: Params, x: jax.Array, cfg: ModelConfig, state=None
+) -> tuple[jax.Array, Params]:
+    """Train/prefill: x (B, S, d) -> (y (B, S, d), final state)."""
+    bsz, s, _ = x.shape
+    if state is None:
+        state = init_mamba_state(cfg, bsz)
+    xs, dts, bs, cs, z, tail = _pre_scan(p, x, cfg, state["conv"])
+    a = -jnp.exp(p["a_log"])
+
+    lc = CHUNK
+    while s % lc:
+        lc //= 2
+    nch = s // lc
+
+    def chunk(h, inputs):
+        cx, cdt, cb, cc = inputs  # (lc, B, ...)
+
+        def pos(h, pin):
+            x_t, dt_t, b_t, c_t = pin
+            h, y = _ssm_step(h, x_t, dt_t, b_t, c_t, a)
+            return h, y
+
+        h, ys = jax.lax.scan(pos, h, (cx, cdt, cb, cc))
+        return h, ys
+
+    def to_chunks(arr):  # (B, S, ...) -> (nch, lc, B, ...)
+        arr = jnp.moveaxis(arr, 1, 0)  # (S, B, ...)
+        return arr.reshape((nch, lc) + arr.shape[1:])
+
+    h, ys = jax.lax.scan(
+        jax.checkpoint(chunk),
+        state["ssm"],
+        (to_chunks(xs), to_chunks(dts), to_chunks(bs), to_chunks(cs)),
+    )
+    ys = jnp.moveaxis(ys.reshape((s,) + ys.shape[2:]), 0, 1)  # (B, S, di)
+    y = (ys + p["d_skip"][None, None] * xs.astype(jnp.float32))
+    y = y.astype(cfg.act_dtype)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"].astype(cfg.act_dtype))
+    return out, {"conv": tail.astype(cfg.act_dtype), "ssm": h}
+
+
+def mamba_decode(
+    p: Params, x: jax.Array, state: Params, cfg: ModelConfig
+) -> tuple[jax.Array, Params]:
+    """x (B, 1, d) -> (y (B, 1, d), new state).  Same math, S=1."""
+    xs, dts, bs, cs, z, tail = _pre_scan(p, x, cfg, state["conv"])
+    a = -jnp.exp(p["a_log"])
+    h, y = _ssm_step(state["ssm"], xs[:, 0], dts[:, 0], bs[:, 0], cs[:, 0], a)
+    y = (y + p["d_skip"][None] * xs[:, 0].astype(jnp.float32))
+    y = y.astype(cfg.act_dtype)[:, None]
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"].astype(cfg.act_dtype))
+    return out, {"conv": tail.astype(cfg.act_dtype), "ssm": h}

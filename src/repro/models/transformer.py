@@ -1,0 +1,314 @@
+"""Model assembly: block dispatch, scan-over-superblocks, embedding/frontends,
+training loss, prefill and decode.
+
+The layer stack is `n_super` repetitions of the config's block pattern (the
+"superblock"), executed with `lax.scan` over stacked parameters so HLO size
+is O(period), not O(n_layers), and rematerialized per superblock.  Caches and
+recurrent states ride the same scan as stacked pytrees, giving uniform
+train / prefill / decode entry points for every family (dense, MoE, hybrid
+Mamba, xLSTM, VLM/audio stubs).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers, moe as moe_mod, ssm, xlstm
+from repro.models.layers import Params
+
+FRONTEND_DIM = 1024  # feature dim delivered by the (stubbed) modality encoder
+
+
+# ---------------------------------------------------------------------------
+# single block (mixer + optional FFN/MoE)
+# ---------------------------------------------------------------------------
+
+
+def init_block(key, cfg: ModelConfig, slot: int) -> Params:
+    kind = cfg.pattern[slot]
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = jnp.dtype(cfg.param_dtype)
+    p: Params = {"norm1": jnp.ones((cfg.d_model,), dt)}
+    if kind in ("attn", "attn_chunked"):
+        p["core"] = layers.init_attention(k1, cfg)
+    elif kind == "mamba":
+        p["core"] = ssm.init_mamba(k1, cfg)
+    elif kind == "mlstm":
+        p["core"] = xlstm.init_mlstm(k1, cfg)
+    elif kind == "slstm":
+        p["core"] = xlstm.init_slstm(k1, cfg)
+    else:
+        raise ValueError(kind)
+    moe_cfg = cfg.moe_for(slot)
+    if moe_cfg is not None:
+        p["norm2"] = jnp.ones((cfg.d_model,), dt)
+        p["ffn"] = moe_mod.init_moe(k2, cfg, moe_cfg)
+    elif cfg.d_ff:
+        p["norm2"] = jnp.ones((cfg.d_model,), dt)
+        p["ffn"] = layers.init_mlp(k3, cfg)
+    return p
+
+
+def _mixer_apply(p, x, cfg, kind, positions, q_offset, state):
+    if kind in ("attn", "attn_chunked"):
+        return layers.attention_apply(
+            p, x, cfg, kind=kind, positions=positions, q_offset=q_offset
+        )
+    if kind == "mamba":
+        return ssm.mamba_apply(p, x, cfg, state)
+    if kind == "mlstm":
+        return xlstm.mlstm_apply(p, x, cfg, state)
+    if kind == "slstm":
+        return xlstm.slstm_apply(p, x, cfg, state)
+    raise ValueError(kind)
+
+
+def _mixer_decode(p, x, cache, pos, cfg, kind):
+    if kind in ("attn", "attn_chunked"):
+        return layers.attention_decode(p, x, cache, pos, cfg, kind=kind)
+    if kind == "mamba":
+        return ssm.mamba_decode(p, x, cache, cfg)
+    if kind == "mlstm":
+        return xlstm.mlstm_decode(p, x, cache, cfg)
+    if kind == "slstm":
+        return xlstm.slstm_decode(p, x, cache, cfg)
+    raise ValueError(kind)
+
+
+def block_apply(p, x, cfg, slot, positions, q_offset=0, state=None):
+    kind = cfg.pattern[slot]
+    h = layers.rms_norm(x, p["norm1"], cfg.norm_eps)
+    mix, cache = _mixer_apply(p["core"], h, cfg, kind, positions, q_offset,
+                              state)
+    x = x + mix
+    aux = jnp.zeros((), jnp.float32)
+    if "ffn" in p:
+        h = layers.rms_norm(x, p["norm2"], cfg.norm_eps)
+        moe_cfg = cfg.moe_for(slot)
+        if moe_cfg is not None:
+            y, aux = moe_mod.moe_apply(p["ffn"], h, cfg, moe_cfg)
+        else:
+            y = layers.mlp_apply(p["ffn"], h, cfg)
+        x = x + y
+    return x, cache, aux
+
+
+def block_decode(p, x, cache, pos, cfg, slot):
+    kind = cfg.pattern[slot]
+    h = layers.rms_norm(x, p["norm1"], cfg.norm_eps)
+    mix, cache = _mixer_decode(p["core"], h, cache, pos, cfg, kind)
+    x = x + mix
+    if "ffn" in p:
+        h = layers.rms_norm(x, p["norm2"], cfg.norm_eps)
+        moe_cfg = cfg.moe_for(slot)
+        if moe_cfg is not None:
+            y, _ = moe_mod.moe_apply(p["ffn"], h, cfg, moe_cfg)
+        else:
+            y = layers.mlp_apply(p["ffn"], h, cfg)
+        x = x + y
+    return x, cache
+
+
+def init_block_cache(cfg: ModelConfig, slot: int, batch: int, s_max: int):
+    kind = cfg.pattern[slot]
+    if kind in ("attn", "attn_chunked"):
+        return layers.init_attn_cache(cfg, batch, s_max, kind)
+    if kind == "mamba":
+        return ssm.init_mamba_state(cfg, batch)
+    if kind == "mlstm":
+        return xlstm.init_mlstm_state(cfg, batch)
+    if kind == "slstm":
+        return xlstm.init_slstm_state(cfg, batch)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+
+def init_superblock(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, len(cfg.pattern))
+    return {f"b{j}": init_block(ks[j], cfg, j) for j in range(len(cfg.pattern))}
+
+
+def init_model(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 4 + cfg.n_super)
+    dt = jnp.dtype(cfg.param_dtype)
+    p: Params = {
+        "embed": (jax.random.normal(ks[0], (cfg.vocab, cfg.d_model),
+                                    jnp.float32) * 0.02).astype(dt),
+        "super": jax.vmap(lambda k: init_superblock(k, cfg))(ks[4:]),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = layers.init_dense(ks[1], cfg.d_model, (cfg.vocab,), dt)
+    if cfg.frontend:
+        p["frontend_proj"] = layers.init_dense(
+            ks[2], FRONTEND_DIM, (cfg.d_model,), dt
+        )
+    return p
+
+
+def embed_inputs(p: Params, cfg: ModelConfig, batch: dict[str, Any]):
+    """tokens (B, S_tok) [+ features (B, S_f, FRONTEND_DIM)] -> (B, S, d)."""
+    dt = cfg.act_dtype
+    x = p["embed"].astype(dt)[batch["tokens"]]
+    if cfg.frontend:
+        feats = jnp.einsum(
+            "bsf,fd->bsd", batch["features"].astype(dt),
+            p["frontend_proj"].astype(dt),
+        )
+        x = jnp.concatenate([feats, x], axis=1)
+    return x
+
+
+def forward(
+    p: Params,
+    cfg: ModelConfig,
+    batch: dict[str, Any],
+    *,
+    collect_cache: bool = False,
+    remat_policy: str = "nothing",
+    act_spec=None,  # PartitionSpec for the (B, S, d) residual stream
+):
+    """Full forward (train / prefill).  Returns (logits, aux, caches).
+
+    `act_spec` constrains the scan carry (the only activation saved per
+    superblock under remat): without it the (n_super, B, S, d) residuals are
+    replicated over "model" — 26 GB/device at 88 layers x 4k (measured)."""
+    x = embed_inputs(p, cfg, batch)
+    s = x.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)
+
+    def constrain(x):
+        if act_spec is not None:
+            return jax.lax.with_sharding_constraint(x, act_spec)
+        return x
+
+    x = constrain(x)
+
+    # (per-block remat inside the superblock was tried and REFUTED: peak
+    # temp got slightly worse — XLA's buffer assignment already bounds the
+    # live window per block; see EXPERIMENTS.md §Perf)
+    def sb(carry, sbp):
+        x, aux = carry
+        caches = {}
+        for j in range(len(cfg.pattern)):
+            x, cache, a = block_apply(sbp[f"b{j}"], x, cfg, j, positions)
+            x = constrain(x)
+            caches[f"b{j}"] = cache
+            aux = aux + a
+        return (x, aux), caches if collect_cache else None
+
+    policy = {
+        "nothing": jax.checkpoint_policies.nothing_saveable,
+        "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+    }[remat_policy]
+    sb = jax.checkpoint(sb, policy=policy)
+    (x, aux), caches = jax.lax.scan(
+        sb, (x, jnp.zeros((), jnp.float32)), p["super"]
+    )
+    x = layers.rms_norm(x, p["final_norm"], cfg.norm_eps)
+    head = (p["embed"].T if cfg.tie_embeddings else p["head"])
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x, head.astype(cfg.act_dtype)
+    ).astype(jnp.float32)
+    return logits, aux, caches
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token cross-entropy, f32.  logits (B, S, V), labels (B, S)."""
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def train_loss(p: Params, cfg: ModelConfig, batch, remat_policy="nothing",
+               act_spec=None):
+    """batch: tokens (B, S), labels (B, S_total) — for frontend archs the
+    label stream covers the frontend positions too (stub targets)."""
+    logits, aux, _ = forward(p, cfg, batch, remat_policy=remat_policy,
+                             act_spec=act_spec)
+    return softmax_xent(logits, batch["labels"]) + aux
+
+
+def prefill(p: Params, cfg: ModelConfig, batch, act_spec=None):
+    """Returns (last-position logits (B, V), decode-ready caches).  Cache
+    leaves are stacked (n_super, B, S, ...); chunked-attention slots are
+    rearranged into decode's ring layout."""
+    logits, _, caches = forward(p, cfg, batch, collect_cache=True,
+                                act_spec=act_spec)
+
+    def fix(path_cache, slot_kind):
+        if slot_kind == "attn_chunked":
+            return jax.tree.map(
+                lambda kv: layers.ring_from_prefill(kv, cfg.chunk_size,
+                                                    axis=2),
+                path_cache,
+            )
+        return path_cache
+
+    caches = {
+        k: fix(v, cfg.pattern[int(k[1:])]) for k, v in caches.items()
+    }
+    return logits[:, -1], caches
+
+
+def grow_attn_caches(caches, cfg: ModelConfig, extra: int):
+    """Pad full-attention K/V caches by `extra` positions (decode headroom).
+    Chunked/recurrent slots are fixed-size and pass through."""
+    out = {}
+    for k, v in caches.items():
+        if cfg.pattern[int(k[1:])] == "attn":
+            out[k] = jax.tree.map(
+                lambda kv: jnp.pad(
+                    kv, [(0, 0), (0, 0), (0, extra)] + [(0, 0)] * (kv.ndim - 3)
+                ),
+                v,
+            )
+        else:
+            out[k] = v
+    return out
+
+
+def decode_step(p: Params, cfg: ModelConfig, tokens, caches, pos):
+    """One token for every sequence.  tokens (B, 1); caches as from
+    prefill/init_decode_caches; pos scalar int32.  Returns (logits, caches)."""
+    dt = cfg.act_dtype
+    x = p["embed"].astype(dt)[tokens]
+
+    def sb(x, xs):
+        sbp, cache = xs
+        new = {}
+        for j in range(len(cfg.pattern)):
+            x, c = block_decode(sbp[f"b{j}"], x, cache[f"b{j}"], pos, cfg, j)
+            new[f"b{j}"] = c
+        return x, new
+
+    x, new_caches = jax.lax.scan(sb, x, (p["super"], caches))
+    x = layers.rms_norm(x, p["final_norm"], cfg.norm_eps)
+    head = (p["embed"].T if cfg.tie_embeddings else p["head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(dt))[:, 0]
+    return logits.astype(jnp.float32), new_caches
+
+
+def init_decode_caches(cfg: ModelConfig, batch: int, s_max: int):
+    """Stacked (n_super, ...) cache pytree for decode-from-scratch (and the
+    decode dry-run cells, via eval_shape)."""
+    def one(_):
+        return {
+            f"b{j}": init_block_cache(cfg, j, batch, s_max)
+            for j in range(len(cfg.pattern))
+        }
+
+    return jax.tree.map(
+        lambda *xs: jnp.stack(xs), *[one(i) for i in range(cfg.n_super)]
+    ) if cfg.n_super > 1 else jax.tree.map(
+        lambda x: x[None], one(0)
+    )

@@ -1,0 +1,271 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, inherently sequential) — [arXiv:2405.04517].
+
+mLSTM trains with the chunkwise formulation: intra-chunk quadratic attention
+with log-gate decays + inter-chunk recurrent (C, n, m) state, all stabilized
+in log space.  This avoids materializing the (B, H, Dh, Dh) matrix state per
+position (the recurrent form would checkpoint terabytes at 4k train).  Decode
+uses the exact single-step recurrence; chunked-vs-recurrent equivalence is a
+unit test.
+
+sLSTM is sequential by design (the xLSTM paper accepts this); we scan over
+positions with per-head block-diagonal recurrence.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params, init_dense
+
+MLSTM_CHUNK = 64
+NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg: ModelConfig) -> Params:
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 7)
+    return {
+        "wq": init_dense(ks[0], d, (h, hd), dt),
+        "wk": init_dense(ks[1], d, (h, hd), dt),
+        "wv": init_dense(ks[2], d, (h, hd), dt),
+        "wi": init_dense(ks[3], d, (h,), dt),
+        "wf": init_dense(ks[4], d, (h,), dt),
+        "bi": jnp.zeros((h,), dt),
+        "bf": jnp.full((h,), 3.0, dt),  # open forget gates at init
+        "wo_gate": init_dense(ks[5], d, (d,), dt),
+        "out": init_dense(ks[6], d, (d,), dt),
+    }
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int):
+    h, hd = cfg.n_heads, cfg.hd
+    return {
+        "C": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, h, hd), jnp.float32),
+        "m": jnp.full((batch, h), NEG, jnp.float32),
+    }
+
+
+def _mlstm_qkv_gates(p: Params, x: jax.Array, cfg: ModelConfig):
+    dt = cfg.act_dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt)) / math.sqrt(cfg.hd)
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    li = (jnp.einsum("bsd,dh->bsh", x, p["wi"].astype(dt))
+          + p["bi"].astype(dt)).astype(jnp.float32)
+    lf = jax.nn.log_sigmoid(
+        (jnp.einsum("bsd,dh->bsh", x, p["wf"].astype(dt))
+         + p["bf"].astype(dt)).astype(jnp.float32)
+    )
+    # head-major f32 for the scan math
+    to = lambda t: jnp.moveaxis(t.astype(jnp.float32), 2, 1)  # (B,H,S,hd)
+    return to(q), to(k), to(v), li.swapaxes(1, 2), lf.swapaxes(1, 2)
+
+
+def mlstm_step(q_t, k_t, v_t, li_t, lf_t, state):
+    """Exact single-position recurrence (decode + equivalence oracle).
+    q_t..v_t (B, H, hd); li_t, lf_t (B, H)."""
+    c, n, m = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(lf_t + m, li_t)
+    i_p = jnp.exp(li_t - m_new)
+    f_p = jnp.exp(lf_t + m - m_new)
+    c = f_p[..., None, None] * c + i_p[..., None, None] * (
+        v_t[..., :, None] * k_t[..., None, :]
+    )  # (B,H,hd_v,hd_k)
+    n = f_p[..., None] * n + i_p[..., None] * k_t
+    num = jnp.einsum("bhvk,bhk->bhv", c, q_t)
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhk,bhk->bh", n, q_t)), jnp.exp(-m_new)
+    )
+    h_t = num / den[..., None]
+    return h_t, {"C": c, "n": n, "m": m_new}
+
+
+def _mlstm_chunk(state, q, k, v, li, lf):
+    """Chunkwise-parallel form.  q..v (B,H,L,hd); li, lf (B,H,L).
+    Returns (h (B,H,L,hd), new state).  Matches repeated mlstm_step."""
+    c_in, n_in, m_in = state["C"], state["n"], state["m"]
+    b_cum = jnp.cumsum(lf, axis=-1)  # inclusive: b_t
+    g_total = b_cum[..., -1]
+
+    # stabilizers
+    a_s = li - b_cum  # li_s - b_s
+    m_intra = b_cum + jax.lax.cummax(a_s, axis=a_s.ndim - 1)  # max_{s<=t}
+    m_inter = m_in[..., None] + b_cum
+    m_t = jnp.maximum(m_intra, m_inter)  # (B,H,L)
+
+    # intra-chunk: D_ts = exp(li_s + b_t - b_s - m_t) for s <= t
+    dmat = li[..., None, :] + b_cum[..., :, None] - b_cum[..., None, :] \
+        - m_t[..., :, None]
+    ls = li.shape[-1]
+    causal = jnp.tril(jnp.ones((ls, ls), bool))
+    dmat = jnp.where(causal, dmat, NEG)
+    dexp = jnp.exp(dmat)  # (B,H,L,L)
+    qk = jnp.einsum("bhld,bhsd->bhls", q, k)
+    h_intra = jnp.einsum("bhls,bhsd->bhld", qk * dexp, v)
+    n_intra = jnp.einsum("bhls,bhsd->bhld", dexp, k)
+
+    # inter-chunk contribution
+    w_inter = jnp.exp(m_in[..., None] + b_cum - m_t)  # (B,H,L)
+    h_inter = jnp.einsum("bhvk,bhlk->bhlv", c_in, q) * w_inter[..., None]
+    n_inter = n_in[..., None, :] * w_inter[..., None]
+
+    num = h_intra + h_inter
+    n_vec = n_intra + n_inter
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhlk,bhlk->bhl", n_vec, q)), jnp.exp(-m_t)
+    )
+    h_out = num / den[..., None]
+
+    # state update to the chunk end
+    m_out = jnp.maximum(
+        g_total + m_in, jnp.max(li + g_total[..., None] - b_cum, axis=-1)
+    )
+    w_c = jnp.exp(li + g_total[..., None] - b_cum - m_out[..., None])
+    c_out = jnp.exp(g_total + m_in - m_out)[..., None, None] * c_in \
+        + jnp.einsum("bhl,bhlv,bhlk->bhvk", w_c, v, k)
+    n_out = jnp.exp(g_total + m_in - m_out)[..., None] * n_in \
+        + jnp.einsum("bhl,bhlk->bhk", w_c, k)
+    return h_out, {"C": c_out, "n": n_out, "m": m_out}
+
+
+def mlstm_apply(
+    p: Params, x: jax.Array, cfg: ModelConfig, state=None
+) -> tuple[jax.Array, Params]:
+    bsz, s, d = x.shape
+    if state is None:
+        state = init_mlstm_state(cfg, bsz)
+    q, k, v, li, lf = _mlstm_qkv_gates(p, x, cfg)
+
+    lc = MLSTM_CHUNK
+    while s % lc:
+        lc //= 2
+    nch = s // lc
+
+    def to_chunks(t):  # (B,H,S,...) -> (nch, B,H,lc,...)
+        t = jnp.moveaxis(t, 2, 0).reshape((nch, lc) + t.shape[:2] + t.shape[3:])
+        return jnp.moveaxis(t, 1, 3)  # (nch, B, H, lc, ...)
+
+    def chunk(st, inputs):
+        cq, ck, cv, cli, clf = inputs
+        h, st = _mlstm_chunk(st, cq, ck, cv, cli, clf)
+        return st, h
+
+    st, hs = jax.lax.scan(
+        jax.checkpoint(chunk), state,
+        (to_chunks(q), to_chunks(k), to_chunks(v), to_chunks(li),
+         to_chunks(lf)),
+    )  # hs (nch, B, H, lc, hd)
+    h = hs.transpose(0, 3, 1, 2, 4).reshape(s, bsz, cfg.n_heads, cfg.hd)
+    h = jnp.moveaxis(h, 0, 1).reshape(bsz, s, d)
+    return _mlstm_out(p, x, h, cfg), st
+
+
+def _mlstm_out(p, x, h, cfg):
+    dt = cfg.act_dtype
+    h = _headwise_rms(h, cfg).astype(dt)
+    o = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x, p["wo_gate"].astype(dt)))
+    return jnp.einsum("bsd,de->bse", h * o, p["out"].astype(dt))
+
+
+def _headwise_rms(h, cfg, eps=1e-6):
+    b, s, d = h.shape
+    hh = h.reshape(b, s, cfg.n_heads, cfg.hd).astype(jnp.float32)
+    hh = hh * jax.lax.rsqrt(jnp.mean(hh * hh, axis=-1, keepdims=True) + eps)
+    return hh.reshape(b, s, d)
+
+
+def mlstm_decode(
+    p: Params, x: jax.Array, state: Params, cfg: ModelConfig
+) -> tuple[jax.Array, Params]:
+    q, k, v, li, lf = _mlstm_qkv_gates(p, x, cfg)  # S=1
+    h_t, st = mlstm_step(
+        q[:, :, 0], k[:, :, 0], v[:, :, 0], li[:, :, 0], lf[:, :, 0], state
+    )
+    h = h_t.reshape(x.shape[0], 1, -1)
+    return _mlstm_out(p, x, h, cfg), st
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg: ModelConfig) -> Params:
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    return {
+        "w_in": init_dense(ks[0], d, (4, h, hd), dt),
+        "r": (jax.random.normal(ks[1], (h, hd, 4, hd), jnp.float32)
+              / math.sqrt(hd)).astype(dt),
+        "b": jnp.zeros((4, h, hd), dt)
+        .at[1].set(3.0),  # forget-gate bias
+        "out": init_dense(ks[2], d, (d,), dt),
+    }
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int):
+    h, hd = cfg.n_heads, cfg.hd
+    z = jnp.zeros((batch, h, hd), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((batch, h, hd), NEG,
+                                                  jnp.float32)}
+
+
+def slstm_step(pre_x_t, r, state):
+    """pre_x_t (B, 4, H, hd) = W x_t + b; r (H, hd, 4, hd) recurrent."""
+    c, n, h_prev, m = state["c"], state["n"], state["h"], state["m"]
+    pre = pre_x_t + jnp.einsum(
+        "bhk,hkgj->bghj", h_prev, r.astype(jnp.float32)
+    )
+    li, fraw, zraw, oraw = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+    lf = jax.nn.log_sigmoid(fraw)
+    m_new = jnp.maximum(lf + m, li)
+    i_p = jnp.exp(li - m_new)
+    f_p = jnp.exp(lf + m - m_new)
+    c = f_p * c + i_p * jnp.tanh(zraw)
+    n = f_p * n + i_p
+    h_t = jax.nn.sigmoid(oraw) * c / jnp.maximum(n, 1e-6)
+    return h_t, {"c": c, "n": n, "h": h_t, "m": m_new}
+
+
+def slstm_apply(
+    p: Params, x: jax.Array, cfg: ModelConfig, state=None
+) -> tuple[jax.Array, Params]:
+    bsz, s, d = x.shape
+    if state is None:
+        state = init_slstm_state(cfg, bsz)
+    dt = cfg.act_dtype
+    pre = (jnp.einsum("bsd,dghk->bsghk", x, p["w_in"].astype(dt))
+           + p["b"].astype(dt)).astype(jnp.float32)
+
+    def step(st, pre_t):
+        h_t, st = slstm_step(pre_t, p["r"], st)
+        return st, h_t
+
+    st, hs = jax.lax.scan(step, state, jnp.moveaxis(pre, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).reshape(bsz, s, d)
+    h = _headwise_rms(h, cfg).astype(dt)
+    return jnp.einsum("bsd,de->bse", h, p["out"].astype(dt)), st
+
+
+def slstm_decode(
+    p: Params, x: jax.Array, state: Params, cfg: ModelConfig
+) -> tuple[jax.Array, Params]:
+    dt = cfg.act_dtype
+    pre = (jnp.einsum("bsd,dghk->bsghk", x, p["w_in"].astype(dt))
+           + p["b"].astype(dt)).astype(jnp.float32)
+    h_t, st = slstm_step(pre[:, 0], p["r"], state)
+    h = _headwise_rms(h_t.reshape(x.shape[0], 1, -1), cfg).astype(dt)
+    return jnp.einsum("bsd,de->bse", h, p["out"].astype(dt)), st

@@ -1,0 +1,107 @@
+"""DSATUR coloring + mesh mapping: correctness and paper-claim properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import coloring, mapping
+from repro.core.graphs import (
+    GridMRF,
+    bn_repository_names,
+    bn_repository_replica,
+    random_bayesnet,
+)
+
+
+def _random_adj(n, p, seed):
+    rng = np.random.default_rng(seed)
+    adj = [set() for _ in range(n)]
+    for i in range(n):
+        for j in range(i + 1, n):
+            if rng.random() < p:
+                adj[i].add(j)
+                adj[j].add(i)
+    return adj
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 40), st.floats(0.0, 0.9), st.integers(0, 10**6))
+def test_property_proper_coloring(n, p, seed):
+    """Hypothesis: DSATUR always yields a proper coloring."""
+    adj = _random_adj(n, p, seed)
+    colors = coloring.dsatur(adj)
+    assert coloring.verify_coloring(adj, colors)
+
+
+def test_grid_needs_two_colors():
+    """Paper Sec. II-B.2: 2-D grids = 2-color checkerboard."""
+    mrf = GridMRF(8, 8, 2)
+    colors = coloring.dsatur(mrf.adjacency())
+    assert colors.max() + 1 == 2
+    assert coloring.verify_coloring(mrf.adjacency(), colors)
+    np.testing.assert_array_equal(
+        colors.reshape(8, 8), mrf.checkerboard_colors()
+    )
+
+
+@pytest.mark.parametrize("name", bn_repository_names())
+def test_bn_replicas_color_like_paper(name):
+    """Fig. 9: the benchmark BNs color with a small number of colors (the
+    paper reports <= 6 on the moral graphs of its replicas)."""
+    bn = bn_repository_replica(name)
+    adj = bn.moral_adjacency()
+    colors = coloring.dsatur(adj)
+    assert coloring.verify_coloring(adj, colors)
+    assert colors.max() + 1 <= 12  # small vs n_nodes
+    stats = coloring.color_stats(colors)
+    assert stats["n_colors"] < bn.n_nodes or bn.n_nodes <= 6
+
+
+def test_speedup_scales_for_large_graphs():
+    """Fig. 9 line graphs: big sparse graphs scale with cores, tiny ones
+    saturate."""
+    big = bn_repository_replica("pigs")
+    small = bn_repository_replica("cancer")
+    cb = coloring.dsatur(big.moral_adjacency())
+    cs = coloring.dsatur(small.moral_adjacency())
+    assert coloring.parallel_speedup(cb, 16) > 8.0
+    assert coloring.parallel_speedup(cs, 16) < 4.0
+    # more cores never hurt
+    for c in (cb, cs):
+        seq = [coloring.parallel_speedup(c, k) for k in (1, 2, 4, 8, 16)]
+        assert all(b >= a - 1e-9 for a, b in zip(seq, seq[1:]))
+
+
+def test_markov_blanket_and_moral_graph():
+    bn = random_bayesnet(15, max_parents=3, seed=2)
+    adj = bn.moral_adjacency()
+    for i in range(bn.n_nodes):
+        assert adj[i] == bn.markov_blanket(i)
+        assert i not in adj[i]
+        for j in adj[i]:
+            assert i in adj[j]
+
+
+def test_greedy_map_beats_random():
+    """Sec. IV-B: the placement heuristic reduces communication distance."""
+    bn = bn_repository_replica("alarm")
+    adj = bn.moral_adjacency()
+    colors = coloring.dsatur(adj)
+    pl = mapping.greedy_map(adj, colors, (4, 4))
+    costs_rand = [
+        mapping.comm_cost(adj, mapping.random_map(bn.n_nodes, (4, 4), s))
+        for s in range(5)
+    ]
+    assert mapping.comm_cost(adj, pl) < min(costs_rand)
+
+
+def test_greedy_map_balances_load():
+    bn = bn_repository_replica("hepar2")
+    adj = bn.moral_adjacency()
+    colors = coloring.dsatur(adj)
+    pl = mapping.greedy_map(adj, colors, (4, 4))
+    for c in range(colors.max() + 1):
+        per_core = np.bincount(pl.placement[colors == c], minlength=16)
+        cap = -(-int((colors == c).sum()) // 16)
+        assert per_core.max() <= cap

@@ -1,0 +1,97 @@
+"""Chromatic Gibbs on Bayes nets: convergence to exact marginals, ablations."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import bayesnet as bnet
+from repro.core.draws import SAMPLERS
+from repro.core.exact import ve_marginal
+from repro.core.graphs import bn_repository_replica, random_bayesnet
+
+
+def _max_tvd(bn, cbn, marg, evidence):
+    errs = []
+    for q in range(bn.n_nodes):
+        if q in evidence:
+            continue
+        exact = ve_marginal(bn, q, evidence)
+        errs.append(0.5 * np.abs(marg[q][: len(exact)] - exact).sum())
+    return max(errs)
+
+
+@pytest.mark.parametrize("sampler", SAMPLERS)
+def test_converges_to_exact_marginals(sampler):
+    bn = random_bayesnet(8, max_parents=2, cards=(2, 3), seed=1)
+    ev = {0: 1}
+    cbn = bnet.compile_bayesnet(bn, evidence=ev)
+    marg, _ = bnet.run_gibbs(
+        cbn, jax.random.key(0), n_chains=64, n_iters=400, burn_in=100,
+        sampler=sampler,
+    )
+    assert _max_tvd(bn, cbn, np.asarray(marg), ev) < 0.03
+
+
+def test_no_evidence_marginals():
+    bn = random_bayesnet(10, max_parents=2, cards=2, seed=7)
+    cbn = bnet.compile_bayesnet(bn)
+    marg, _ = bnet.run_gibbs(
+        cbn, jax.random.key(1), n_chains=64, n_iters=400, burn_in=100
+    )
+    assert _max_tvd(bn, cbn, np.asarray(marg), {}) < 0.03
+
+
+def test_repo_replica_inference():
+    """End-to-end on the alarm-sized replica (Table IV row, small budget)."""
+    bn = bn_repository_replica("insurance")
+    cbn = bnet.compile_bayesnet(bn)
+    marg, _ = bnet.run_gibbs(
+        cbn, jax.random.key(2), n_chains=32, n_iters=250, burn_in=80
+    )
+    marg = np.asarray(marg)
+    # spot-check a handful of nodes against VE
+    errs = []
+    for q in range(0, bn.n_nodes, 6):
+        exact = ve_marginal(bn, q)
+        errs.append(0.5 * np.abs(marg[q][: len(exact)] - exact).sum())
+    assert max(errs) < 0.08
+
+
+def test_evidence_respected():
+    bn = random_bayesnet(8, max_parents=2, cards=2, seed=3)
+    ev = {2: 1, 5: 0}
+    cbn = bnet.compile_bayesnet(bn, evidence=ev)
+    _, vals = bnet.run_gibbs(
+        cbn, jax.random.key(0), n_chains=16, n_iters=20, burn_in=5
+    )
+    vals = np.asarray(vals)
+    assert (vals[:, 2] == 1).all() and (vals[:, 5] == 0).all()
+
+
+def test_values_always_in_range():
+    bn = random_bayesnet(12, max_parents=3, cards=(2, 3, 4), seed=4)
+    cbn = bnet.compile_bayesnet(bn)
+    _, vals = bnet.run_gibbs(
+        cbn, jax.random.key(0), n_chains=16, n_iters=30, burn_in=0
+    )
+    vals = np.asarray(vals)
+    cards = np.asarray(cbn.cards)
+    assert (vals >= 0).all() and (vals < cards[None]).all()
+
+
+def test_color_groups_partition_nodes():
+    bn = random_bayesnet(20, max_parents=3, seed=5)
+    cbn = bnet.compile_bayesnet(bn, evidence={3: 0})
+    seen = np.concatenate([np.asarray(g.nodes) for g in cbn.groups])
+    assert sorted(seen.tolist()) == [i for i in range(20) if i != 3]
+
+
+def test_deterministic_given_key():
+    bn = random_bayesnet(9, max_parents=2, seed=6)
+    cbn = bnet.compile_bayesnet(bn)
+    m1, v1 = bnet.run_gibbs(cbn, jax.random.key(9), n_chains=8, n_iters=50,
+                            burn_in=10)
+    m2, v2 = bnet.run_gibbs(cbn, jax.random.key(9), n_chains=8, n_iters=50,
+                            burn_in=10)
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+    np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))

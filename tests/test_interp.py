@@ -1,0 +1,86 @@
+"""Interpolation-LUT kernel: kernel-vs-oracle sweeps, accuracy, properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.interp import (
+    LUTSpec,
+    build_exp_weight_lut,
+    build_log_lut,
+    build_lut,
+    interp_ref,
+)
+from repro.kernels import ops
+
+
+@pytest.mark.parametrize("shape", [(4,), (37, 53), (3, 5, 7), (1, 1)])
+@pytest.mark.parametrize("size", [8, 16, 32])
+def test_kernel_matches_ref(shape, size):
+    tab, spec = build_lut(np.exp, -8.0, 0.0, size)
+    rng = np.random.default_rng(size)
+    x = jnp.asarray(rng.uniform(-10, 2, size=shape), jnp.float32)
+    np.testing.assert_allclose(
+        ops.interp(x, tab, spec), interp_ref(x, tab, spec), atol=1e-6
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dtypes(dtype):
+    tab, spec = build_lut(np.tanh, -4.0, 4.0, 16)
+    x = jnp.linspace(-5, 5, 97).astype(dtype)
+    y = ops.interp(x.astype(jnp.float32), tab, spec)
+    ref = interp_ref(x.astype(jnp.float32), tab, spec)
+    np.testing.assert_allclose(y, ref, atol=1e-2 if dtype == jnp.bfloat16 else 1e-6)
+
+
+def test_exact_at_knots():
+    tab, spec = build_lut(np.sin, 0.0, 3.0, 16)
+    xs = jnp.asarray(spec.x0 + spec.dx * np.arange(16), jnp.float32)
+    np.testing.assert_allclose(ops.interp(xs, tab, spec), tab, atol=1e-5)
+
+
+def test_saturating_ends():
+    tab, spec = build_lut(np.exp, -8.0, 0.0, 16)
+    y = ops.interp(jnp.asarray([-100.0, 100.0], jnp.float32), tab, spec)
+    np.testing.assert_allclose(y, [tab[0], tab[-1]], atol=1e-6)
+
+
+def test_exp_lut_accuracy_paper_config():
+    """16-entry table over [-8, 0]: adequate for 8-bit sampling weights
+    (CoopMC / paper Sec. III-D accuracy point)."""
+    tab, spec = build_lut(np.exp, -8.0, 0.0, 16)
+    x = jnp.linspace(-8.0, 0.0, 2000)
+    err = jnp.abs(ops.interp(x, tab, spec) - jnp.exp(x)).max()
+    assert float(err) < 0.03  # < 8 LSB of an 8-bit weight
+
+
+def test_exp_weight_lut_quantization():
+    tab, spec = build_exp_weight_lut(bits=8)
+    assert int(tab[-1]) == 255 and int(tab[0]) == 0
+    w = ops.lut_exp_weights(
+        jnp.asarray([[0.0, -1.0, -2.0, -50.0]], jnp.float32), tab, spec
+    )
+    assert w.dtype == jnp.int32
+    assert int(w[0, 0]) == 255 and int(w[0, 3]) == 0
+    assert int(w[0, 1]) > int(w[0, 2]) > 0
+
+
+def test_log_lut():
+    tab, spec = build_log_lut(size=32)
+    x = jnp.linspace(1.0, 2.0, 500)
+    err = jnp.abs(ops.interp(x, tab, spec) - jnp.log(x)).max()
+    assert float(err) < 1e-3
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.floats(-20, 20), st.integers(4, 32))
+def test_property_output_within_adjacent_knots(x, size):
+    """Linear interpolation never over/undershoots its bracketing entries."""
+    tab, spec = build_lut(np.cos, -3.0, 3.0, size)
+    y = float(ops.interp(jnp.asarray([x], jnp.float32), tab, spec)[0])
+    t = np.asarray(tab)
+    assert t.min() - 1e-5 <= y <= t.max() + 1e-5

@@ -1,0 +1,126 @@
+"""KY rejection sampler: kernel-vs-oracle exactness, statistics, properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import ky
+from repro.kernels import ops
+from repro.kernels.ky_sampler import ky_sample_kernel
+
+
+def _words(key, b, precision, max_retries):
+    n_words = -(-precision * max_retries // 32)
+    return ky.random_words(key, (b,), n_words)
+
+
+@pytest.mark.parametrize("b", [1, 7, 300])
+@pytest.mark.parametrize("n", [2, 5, 31, 100])
+@pytest.mark.parametrize("precision", [8, 16, 24])
+def test_kernel_matches_ref_exactly(b, n, precision):
+    """Same random bit-stream => identical labels and bit accounting."""
+    rng = np.random.default_rng(b * 1000 + n + precision)
+    w = jnp.asarray(rng.integers(0, 50, size=(b, n)), jnp.int32)
+    words = _words(jax.random.key(42), b, precision, 8)
+    lab_ref, st_ref = ky.ky_sample_ref(w, words, n_bins=n, precision=precision)
+    wpad = jnp.pad(w, ((0, 0), (0, 128 - n)))
+    lab_k, st_k = ky_sample_kernel(
+        wpad, words, n_bins=n, precision=precision, interpret=True
+    )
+    np.testing.assert_array_equal(lab_k, lab_ref)
+    np.testing.assert_array_equal(st_k["bits_used"], st_ref["bits_used"])
+    np.testing.assert_array_equal(st_k["rejections"], st_ref["rejections"])
+
+
+def test_block_padding_edges():
+    """Batch not a multiple of the block: wrapper pads and slices correctly."""
+    w = jnp.tile(jnp.asarray([[3, 1]], jnp.int32), (301, 1))
+    labels = ops.ky_sample(w, jax.random.key(0), block_b=64)
+    assert labels.shape == (301,)
+    assert set(np.asarray(labels).tolist()) <= {0, 1}
+
+
+@pytest.mark.parametrize(
+    "weights",
+    [[1, 1, 1], [1, 2, 3, 4, 10], [255] * 32, [1] + [0] * 10 + [9]],
+)
+def test_sampling_distribution_tvd(weights):
+    """Empirical law matches m_i / sum(m) — the exactness claim of C1."""
+    n = len(weights)
+    target = np.asarray(weights, np.float64)
+    target /= target.sum()
+    b = 20000
+    w = jnp.tile(jnp.asarray(weights, jnp.int32), (b, 1))
+    labels = ops.ky_sample(w, jax.random.key(7))
+    emp = np.bincount(np.asarray(labels), minlength=n) / b
+    tvd = 0.5 * np.abs(emp - target).sum()
+    # expected TVD of a multinomial with b draws, with 2.5x headroom
+    expected = 0.5 * np.sqrt(2 / np.pi) * np.sqrt(target * (1 - target) / b).sum()
+    assert tvd < 2.5 * max(expected, 1e-3)
+
+
+def test_zero_weight_bins_never_sampled():
+    w = jnp.tile(jnp.asarray([5, 0, 7, 0, 1], jnp.int32), (5000, 1))
+    labels = np.asarray(ops.ky_sample(w, jax.random.key(3)))
+    assert not np.isin(labels, [1, 3]).any()
+
+
+def test_deterministic_distribution():
+    w = jnp.tile(jnp.asarray([0, 0, 9, 0], jnp.int32), (100, 1))
+    labels = ops.ky_sample(w, jax.random.key(1))
+    assert (labels == 2).all()
+
+
+def test_entropy_scaling_bits_used():
+    """Fig. 11 at unit level: expected bits/sample tracks entropy H (<= H+2),
+    so low-entropy distributions sample faster."""
+    b = 4000
+    peaked = jnp.tile(jnp.asarray([240, 2, 2, 2], jnp.int32), (b, 1))
+    flat = jnp.tile(jnp.asarray([61, 61, 62, 62], jnp.int32), (b, 1))
+    _, st_p = ops.ky_sample(peaked, jax.random.key(0), return_stats=True)
+    _, st_f = ops.ky_sample(flat, jax.random.key(0), return_stats=True)
+    bp = float(st_p["bits_used"].mean())
+    bf = float(st_f["bits_used"].mean())
+    h_p = ky.entropy(np.array([240, 2, 2, 2]))
+    h_f = ky.entropy(np.array([61, 61, 62, 62]))
+    assert bp < bf  # entropy-adaptive cost
+    assert bp <= h_p + 2.1 and bf <= h_f + 2.1  # Knuth-Yao optimality bound
+
+
+def test_scale_to_fill_reduces_rejection():
+    """The scale-to-fill preprocessing keeps P(reject) << 1/2."""
+    w = jnp.tile(jnp.asarray([1, 1, 1], jnp.int32), (8000, 1))
+    _, stats = ops.ky_sample(w, jax.random.key(2), return_stats=True)
+    assert float(stats["rejections"].mean()) < 0.05
+    assert not bool(stats["fallback"].any())
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.lists(st.integers(0, 1000), min_size=2, max_size=64).filter(
+        lambda ws: sum(ws) > 0
+    ),
+    st.integers(0, 2**31 - 1),
+)
+def test_property_labels_valid_and_supported(weights, seed):
+    """Any weight vector: labels in range and only positive-weight bins."""
+    n = len(weights)
+    w = jnp.tile(jnp.asarray(weights, jnp.int32), (64, 1))
+    labels = np.asarray(ops.ky_sample(w, jax.random.key(seed)))
+    assert ((labels >= 0) & (labels < n)).all()
+    assert all(weights[l] > 0 for l in labels)
+
+
+def test_ddg_matrix_invariant():
+    """Extended weights sum to exactly 2^W => DDG tree is complete."""
+    rng = np.random.default_rng(0)
+    m = jnp.asarray(rng.integers(1, 99, size=(50, 7)), jnp.int32)
+    ext = ky.prepare(m, precision=16)
+    np.testing.assert_array_equal(np.asarray(ext.sum(-1)), 1 << 16)
+    mat = ky.ddg_matrix(ext, 16)
+    # reconstruct weights from the binary matrix
+    recon = (mat * (2 ** (16 - 1 - np.arange(16)))).sum(-1)
+    np.testing.assert_array_equal(np.asarray(recon), np.asarray(ext))
