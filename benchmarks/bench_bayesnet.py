@@ -18,7 +18,7 @@ import jax
 import numpy as np
 
 from benchmarks.common import csv_row, timeit
-from repro.core import bayesnet as bnet
+from repro.compile import compile_graph
 from repro.core.exact import ve_marginal
 from repro.core.graphs import bn_repository_replica
 
@@ -33,7 +33,7 @@ def run(quick: bool = False):
     iters = 150 if quick else 300
     for name in workloads:
         bn = bn_repository_replica(name)
-        cbn = bnet.compile_bayesnet(bn)
+        prog = compile_graph(bn)  # cached compile chain (IR -> passes -> program)
         q = bn.n_nodes // 2
 
         # exact VE (Dice-analogue).  The dense/large replicas (hepar2, pigs)
@@ -56,8 +56,8 @@ def run(quick: bool = False):
         times = {}
         for sampler in ("lut_ky", "cdf"):
             def call(s=sampler):
-                return bnet.run_gibbs(
-                    cbn, jax.random.key(0), n_chains=32, n_iters=iters,
+                return prog.run(
+                    jax.random.key(0), n_chains=32, n_iters=iters,
                     burn_in=iters // 4, sampler=s,
                 )[0]
 

@@ -1,13 +1,21 @@
 """Paper Fig. 9 — graph-coloring stats + core-count scaling per BN workload,
 plus the Sec. IV-B mapping heuristic's communication-cost win (vs random
-placement on a 4x4 mesh)."""
+placement on a 4x4 mesh).
+
+Runs through `repro.compile`: one `run_pipeline` call per workload yields
+coloring, placement, and schedule diagnostics in one pass context; the
+random baseline swaps in `RandomMapPass` instead of re-wiring heuristics.
+"""
 
 from __future__ import annotations
 
 import numpy as np
 
 from benchmarks.common import csv_row
-from repro.core import coloring, mapping
+from repro.compile import ir as compile_ir
+from repro.compile import run_pipeline
+from repro.compile.passes import random_baseline_pipeline
+from repro.core import coloring
 from repro.core.graphs import bn_repository_names, bn_repository_replica
 
 
@@ -18,25 +26,28 @@ def run(quick: bool = False):
         names = names[:5]
     for name in names:
         bn = bn_repository_replica(name)
-        adj = bn.moral_adjacency()
-        colors = coloring.dsatur(adj)
-        stats = coloring.color_stats(colors)
+        graph = compile_ir.from_bayesnet(bn)
+        ctx = run_pipeline(graph, mesh_shape=(4, 4))
+        d = ctx.diagnostics
         speedups = {
-            k: coloring.parallel_speedup(colors, k) for k in (4, 16, 64)
+            k: coloring.parallel_speedup(ctx.colors, k) for k in (4, 16, 64)
         }
-        pl = mapping.greedy_map(adj, colors, (4, 4))
-        c_greedy = mapping.comm_cost(adj, pl)
         c_rand = np.mean([
-            mapping.comm_cost(adj, mapping.random_map(bn.n_nodes, (4, 4), s))
+            run_pipeline(
+                graph, mesh_shape=(4, 4),
+                # comm_hops only: stop before the schedule lowering
+                passes=random_baseline_pipeline(s)[:-1],
+            ).diagnostics["comm_hops"]
             for s in range(3)
         ])
         rows.append(csv_row(
             f"fig9_{name}", 0.0,
-            f"nodes={bn.n_nodes};colors={stats['n_colors']};"
-            f"balance={stats['balance']:.2f};"
+            f"nodes={d['n_nodes']};colors={d['n_colors']};"
+            f"balance={d['color_balance']:.2f};"
             f"speedup@4={speedups[4]:.1f};speedup@16={speedups[16]:.1f};"
             f"speedup@64={speedups[64]:.1f};"
-            f"map_hops={c_greedy:.0f};random_hops={c_rand:.0f}",
+            f"map_hops={d['comm_hops']:.0f};random_hops={c_rand:.0f};"
+            f"sweep_cycles={d['schedule_cost']['total_cycles']}",
         ))
     return rows
 

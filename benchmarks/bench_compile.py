@@ -1,0 +1,109 @@
+"""Compile-chain benchmark: compile time, program-cache hit rate, and the
+schedule's comm cost under the greedy placement vs a random baseline.
+
+This is the serving-facing view of `repro.compile`: a repeated workload
+should pay the pass pipeline once (cache hit ~ dict lookup), and the
+schedule the pipeline picks should move fewer bytes x hops than a random
+placement of the same colored graph.
+
+Writes one JSON record per workload to ``benchmarks/results/compile/`` so
+``launch/report.py`` can render the compile table without re-running.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.compile import (
+    cache_stats,
+    clear_program_cache,
+    compile_graph,
+    run_pipeline,
+)
+from repro.compile import ir as compile_ir
+from repro.compile.passes import random_baseline_pipeline
+from repro.core.graphs import GridMRF, bn_repository_replica
+
+RESULTS_DIR = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "results", "compile"
+)
+BN_WORKLOADS = ["survey", "alarm", "insurance", "water", "hepar2", "pigs"]
+N_REPEAT_REQUESTS = 16  # serving-style: same model re-submitted
+
+
+def _graphs(quick: bool):
+    names = BN_WORKLOADS[:3] if quick else BN_WORKLOADS
+    graphs = [compile_ir.from_bayesnet(bn_repository_replica(n))
+              for n in names]
+    graphs.append(compile_ir.from_mrf(
+        GridMRF(16 if quick else 32, 16 if quick else 32, 4, name="grid")))
+    return graphs
+
+
+def run(quick: bool = False):
+    rows = []
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    for graph in _graphs(quick):
+        clear_program_cache()
+        t0 = time.perf_counter()
+        prog = compile_graph(graph)
+        cold_s = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        for _ in range(N_REPEAT_REQUESTS - 1):
+            compile_graph(graph)
+        warm_s = (time.perf_counter() - t0) / (N_REPEAT_REQUESTS - 1)
+        stats = cache_stats()
+
+        cost = prog.schedule.cost()
+        rand_costs = [
+            run_pipeline(
+                graph, mesh_shape=(4, 4), passes=random_baseline_pipeline(s),
+            ).schedule.cost()
+            for s in range(3)
+        ]
+        rand_hop_bytes = float(np.mean(
+            [c["total_hop_bytes"] for c in rand_costs]))
+        rand_cycles = float(np.mean([c["total_cycles"] for c in rand_costs]))
+
+        rec = {
+            "workload": graph.name,
+            "kind": graph.kind,
+            "n_nodes": graph.n_nodes,
+            "ir_key": graph.ir_key[:16],
+            "compile_cold_ms": cold_s * 1e3,
+            "compile_warm_us": warm_s * 1e6,
+            "cache_hit_rate": stats["hit_rate"],
+            "n_colors": prog.diagnostics["n_colors"],
+            "n_rounds": cost["n_rounds"],
+            "sweep_cycles": cost["total_cycles"],
+            "comm_hop_bytes": cost["total_hop_bytes"],
+            "random_hop_bytes": rand_hop_bytes,
+            "random_sweep_cycles": rand_cycles,
+            "pass_times_s": prog.diagnostics["pass_times_s"],
+        }
+        with open(os.path.join(RESULTS_DIR, f"{graph.name}.json"), "w") as f:
+            json.dump(rec, f, indent=1)
+
+        assert cost["total_hop_bytes"] <= rand_hop_bytes, (
+            graph.name, cost["total_hop_bytes"], rand_hop_bytes)
+        rows.append(csv_row(
+            f"compile_{graph.name}", cold_s * 1e6,
+            f"kind={graph.kind};nodes={graph.n_nodes};"
+            f"cold_ms={cold_s*1e3:.1f};warm_us={warm_s*1e6:.1f};"
+            f"hit_rate={stats['hit_rate']:.3f};"
+            f"hop_bytes={cost['total_hop_bytes']};"
+            f"random_hop_bytes={rand_hop_bytes:.0f};"
+            f"sweep_cycles={cost['total_cycles']};"
+            f"random_sweep_cycles={rand_cycles:.0f}",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -17,8 +17,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from benchmarks import (bench_bayesnet, bench_breakdown, bench_coloring,
-                        bench_entropy, bench_interp, bench_mrf,
-                        bench_sampler, bench_token_sampler)
+                        bench_compile, bench_entropy, bench_interp,
+                        bench_mrf, bench_sampler, bench_token_sampler)
 
 SUITES = {
     "sampler": bench_sampler.run,          # Table II
@@ -29,7 +29,11 @@ SUITES = {
     "coloring": bench_coloring.run,        # Fig. 9
     "breakdown": bench_breakdown.run,      # Fig. 2a
     "token_sampler": bench_token_sampler.run,  # beyond-paper (Table V ana.)
+    "compile": bench_compile.run,          # compile chain (Sec. IV / Fig. 8)
 }
+
+# CI sanity set: fast, CPU-friendly, exercises the compile chain end to end
+SMOKE_SUITES = ("coloring", "compile")
 
 
 def roofline_summary():
@@ -60,11 +64,20 @@ def roofline_summary():
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI sanity pass: quick budgets, smoke suites only")
     ap.add_argument("--only", default="")
     ap.add_argument("--roofline", action="store_true")
     args = ap.parse_args()
+    if args.smoke:
+        args.quick = True
     print("name,us_per_call,derived")
-    suites = {args.only: SUITES[args.only]} if args.only else SUITES
+    if args.only:
+        suites = {args.only: SUITES[args.only]}
+    elif args.smoke:
+        suites = {k: SUITES[k] for k in SMOKE_SUITES}
+    else:
+        suites = SUITES
     for name, fn in suites.items():
         t0 = time.time()
         print(f"# --- {name} ---", flush=True)

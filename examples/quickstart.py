@@ -1,5 +1,5 @@
 """Quickstart: exact vs approximate inference on a Bayes net (the paper's
-core workload) in ~30 lines.
+core workload) in ~30 lines, through the `repro.compile` chain.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -7,7 +7,7 @@ core workload) in ~30 lines.
 import jax
 import numpy as np
 
-from repro.core import bayesnet as bnet
+from repro.compile import cache_stats, compile_graph
 from repro.core.exact import ve_marginal
 from repro.core.graphs import bn_repository_replica
 
@@ -21,14 +21,24 @@ def main():
     # exact inference (variable elimination) — the Table IV baseline
     exact = ve_marginal(bn, query, evidence)
 
-    # AIA pipeline: DSATUR coloring -> chromatic parallel Gibbs with
-    # LUT-exp (C2) + rejection-KY sampling (C1)
-    compiled = bnet.compile_bayesnet(bn, evidence=evidence)
-    print(f"alarm replica: {bn.n_nodes} nodes, "
-          f"{max(compiled.colors) + 1} colors "
-          f"(parallel Gibbs sweeps per iteration)")
-    marginals, _ = bnet.run_gibbs(
-        compiled, jax.random.key(0), n_chains=64, n_iters=500, burn_in=125,
+    # AIA compile chain (Fig. 8): BN -> SamplingGraph IR -> moralize ->
+    # DSATUR -> greedy mesh placement -> round schedule -> CompiledProgram
+    prog = compile_graph(bn, evidence=evidence)
+    cost = prog.schedule.cost()
+    print(f"alarm replica: {prog.ir.n_nodes} nodes -> "
+          f"{prog.diagnostics['n_colors']} colors, "
+          f"{cost['n_rounds']} rounds/sweep, "
+          f"~{cost['total_cycles']} model cycles "
+          f"(compiled in {prog.compile_s*1e3:.0f} ms, "
+          f"program {prog.program_key[:12]}...)")
+    # a repeated request hits the program cache instead of re-compiling
+    prog2 = compile_graph(bn, evidence=evidence)
+    assert prog2 is prog
+    print(f"program cache: {cache_stats()['hits']} hit(s)")
+
+    # execute: chromatic parallel Gibbs with LUT-exp (C2) + rejection-KY (C1)
+    marginals, _ = prog.run(
+        jax.random.key(0), n_chains=64, n_iters=500, burn_in=125,
         sampler="lut_ky",
     )
     approx = np.asarray(marginals)[query][: len(exact)]

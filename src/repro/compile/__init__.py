@@ -1,0 +1,52 @@
+"""`repro.compile` — the AIA compile chain (paper Sec. IV, Fig. 8).
+
+Lowers a discrete probabilistic model into an executable sampling program
+through an explicit multi-pass pipeline:
+
+    SamplingGraph IR          (ir.py       — BN/MRF -> one conflict-graph form)
+      -> moralize             (passes.py   — conflict-graph construction)
+      -> dsatur               (            — RV-parallelism detection, C3)
+      -> greedy_map           (            — spatial placement, Sec. IV-B)
+      -> schedule             (schedule.py — per-color rounds + comm ops)
+      -> CompiledProgram      (program.py  — jit / shard_map executable,
+                                             LRU-cached by IR hash)
+
+`compile_graph()` is the single entry point; everything else is exposed for
+benchmarks, tests, and future passes/backends.
+"""
+
+from repro.compile.ir import SamplingGraph
+from repro.compile.passes import (
+    PassContext,
+    default_pipeline,
+    run_pipeline,
+)
+from repro.compile.program import (
+    CompiledProgram,
+    cache_stats,
+    clear_program_cache,
+    compile_graph,
+)
+from repro.compile.schedule import (
+    CommOp,
+    Round,
+    Schedule,
+    build_schedule,
+    verify_schedule,
+)
+
+__all__ = [
+    "SamplingGraph",
+    "PassContext",
+    "default_pipeline",
+    "run_pipeline",
+    "CompiledProgram",
+    "compile_graph",
+    "cache_stats",
+    "clear_program_cache",
+    "CommOp",
+    "Round",
+    "Schedule",
+    "build_schedule",
+    "verify_schedule",
+]

@@ -1,0 +1,132 @@
+"""`SamplingGraph` — the compile chain's input IR (paper Sec. II + Fig. 8).
+
+Bayes nets and grid MRFs enter the compiler through one canonical form: an
+undirected *conflict graph* (edge = the two RVs may not update in the same
+round) plus per-RV cardinalities and baked-in evidence.  The original model
+is kept as the `source` payload — later passes need the CPTs / potentials to
+generate code — but every structural decision (coloring, placement,
+scheduling) reads only the canonical fields, which is what lets one pipeline
+serve both model families.
+
+The IR hashes stably: `ir_key` is a sha256 over the canonical structure AND
+the numeric parameters (CPT bytes, MRF potentials), so it can key the
+program cache — two models that would compile to the same program share a
+key, and any parameter change invalidates it.  Runtime inputs (the MRF
+evidence image, PRNG keys, chain counts) are deliberately *not* part of the
+IR: a serving workload re-runs one cached program with fresh data.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import hashlib
+
+import numpy as np
+
+from repro.core.graphs import DiscreteBayesNet, GridMRF
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingGraph:
+    """Canonical conflict-graph IR for a discrete sampling workload."""
+
+    kind: str  # "bn" | "mrf"
+    n_nodes: int
+    cards: tuple[int, ...]  # per-RV cardinality
+    edges: tuple[tuple[int, int], ...]  # sorted conflict edges, i < j
+    evidence: tuple[tuple[int, int], ...]  # sorted (node, value) pairs
+    source: DiscreteBayesNet | GridMRF
+    name: str = "graph"
+
+    def adjacency(self) -> list[set[int]]:
+        adj: list[set[int]] = [set() for _ in range(self.n_nodes)]
+        for i, j in self.edges:
+            adj[i].add(j)
+            adj[j].add(i)
+        return adj
+
+    @property
+    def n_edges(self) -> int:
+        return len(self.edges)
+
+    @functools.cached_property
+    def ir_key(self) -> str:
+        """Stable content hash: structure + numeric parameters + evidence."""
+        h = hashlib.sha256()
+        h.update(self.kind.encode())
+        h.update(np.asarray(self.cards, np.int64).tobytes())
+        h.update(np.asarray(self.edges, np.int64).tobytes())
+        h.update(np.asarray(self.evidence, np.int64).tobytes())
+        if isinstance(self.source, DiscreteBayesNet):
+            for ps, cpt in zip(self.source.parents, self.source.cpts):
+                h.update(np.asarray(ps, np.int64).tobytes())
+                h.update(np.ascontiguousarray(cpt, np.float64).tobytes())
+        else:
+            m = self.source
+            h.update(
+                f"{m.height},{m.width},{m.n_labels},{m.theta!r},"
+                f"{m.h!r},{m.data_cost}".encode()
+            )
+        return h.hexdigest()
+
+
+def from_bayesnet(
+    bn: DiscreteBayesNet, evidence: dict[int, int] | None = None
+) -> SamplingGraph:
+    """Canonicalize a BN: the conflict graph is the moral graph (i ~ j iff
+    j in MB(i)), and evidence is part of the program (baked into the CPT
+    gathers), hence part of the IR."""
+    bn.validate()
+    adj = bn.moral_adjacency()
+    edges = tuple(
+        (i, j) for i in range(bn.n_nodes) for j in sorted(adj[i]) if i < j
+    )
+    ev = tuple(sorted((int(k), int(v)) for k, v in (evidence or {}).items()))
+    for node, val in ev:
+        if not (0 <= node < bn.n_nodes and 0 <= val < bn.cards[node]):
+            raise ValueError(f"evidence {node}={val} out of range")
+    return SamplingGraph(
+        kind="bn",
+        n_nodes=bn.n_nodes,
+        cards=tuple(int(c) for c in bn.cards),
+        edges=edges,
+        evidence=ev,
+        source=bn,
+        name=bn.name,
+    )
+
+
+def from_mrf(mrf: GridMRF) -> SamplingGraph:
+    """Canonicalize a grid MRF: the conflict graph is the 4-connected grid
+    adjacency.  The evidence image is a *runtime* input (same program, new
+    data every request), so the IR carries none."""
+    adj = mrf.adjacency()
+    n = mrf.height * mrf.width
+    edges = tuple((i, j) for i in range(n) for j in sorted(adj[i]) if i < j)
+    return SamplingGraph(
+        kind="mrf",
+        n_nodes=n,
+        cards=(mrf.n_labels,) * n,
+        edges=edges,
+        evidence=(),
+        source=mrf,
+        name=mrf.name,
+    )
+
+
+def canonicalize(
+    model: DiscreteBayesNet | GridMRF,
+    evidence: dict[int, int] | None = None,
+) -> SamplingGraph:
+    """Front-end dispatch: any supported model -> SamplingGraph."""
+    if isinstance(model, DiscreteBayesNet):
+        return from_bayesnet(model, evidence)
+    if isinstance(model, GridMRF):
+        if evidence:
+            raise ValueError(
+                "MRF evidence is a runtime input of CompiledProgram.run(), "
+                "not part of the IR"
+            )
+        return from_mrf(model)
+    raise TypeError(f"cannot canonicalize {type(model).__name__}")

@@ -1,0 +1,167 @@
+"""Pass pipeline: `moralize -> dsatur -> greedy_map -> schedule` (Fig. 8).
+
+Each pass is a named, timed transformation over a `PassContext`; the context
+accumulates the artifacts (conflict graph, colors, placement, schedule) and
+a diagnostics dict that benchmarks and `launch/report.py` render directly.
+The passes wrap the existing `core/coloring.py` and `core/mapping.py`
+heuristics — the pipeline is the compiler spine those modules were missing,
+not a reimplementation of them.
+
+Custom pipelines are first-class: `run_pipeline(ir, passes=[...])` lets a
+benchmark swap `GreedyMapPass` for `RandomMapPass` (the Fig. 9 baseline) or
+a future pass without touching the driver.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.compile import schedule as schedule_mod
+from repro.compile.ir import SamplingGraph
+from repro.core import coloring as coloring_mod
+from repro.core import mapping as mapping_mod
+
+
+@dataclasses.dataclass
+class PassContext:
+    """Mutable state threaded through the pipeline."""
+
+    ir: SamplingGraph
+    mesh_shape: tuple[int, int] = (4, 4)
+    adj: list[set[int]] | None = None
+    colors: np.ndarray | None = None
+    placement: mapping_mod.MeshPlacement | None = None
+    schedule: schedule_mod.Schedule | None = None
+    diagnostics: dict = dataclasses.field(default_factory=dict)
+    pass_times_s: dict = dataclasses.field(default_factory=dict)
+
+    def require(self, *fields: str) -> None:
+        for f in fields:
+            if getattr(self, f) is None:
+                raise RuntimeError(
+                    f"pass ordering error: '{f}' not produced yet"
+                )
+
+
+class Pass:
+    """A named pipeline stage; subclasses mutate the context in `run`."""
+
+    name = "pass"
+
+    def run(self, ctx: PassContext) -> None:
+        raise NotImplementedError
+
+    def __call__(self, ctx: PassContext) -> None:
+        t0 = time.perf_counter()
+        self.run(ctx)
+        ctx.pass_times_s[self.name] = time.perf_counter() - t0
+
+
+class MoralizePass(Pass):
+    """Materialize the conflict graph.  The IR already canonicalized the
+    moral / grid adjacency into edges; this pass expands it to the adjacency
+    sets every later pass consumes, and records graph-shape diagnostics."""
+
+    name = "moralize"
+
+    def run(self, ctx: PassContext) -> None:
+        ctx.adj = ctx.ir.adjacency()
+        degrees = np.array([len(a) for a in ctx.adj] or [0])
+        ctx.diagnostics.update(
+            n_nodes=ctx.ir.n_nodes,
+            n_edges=ctx.ir.n_edges,
+            max_degree=int(degrees.max()),
+        )
+
+
+class DsaturPass(Pass):
+    """RV-parallelism detection (paper C3): DSATUR coloring + verification."""
+
+    name = "dsatur"
+
+    def run(self, ctx: PassContext) -> None:
+        ctx.require("adj")
+        ctx.colors = coloring_mod.dsatur(ctx.adj)
+        assert coloring_mod.verify_coloring(ctx.adj, ctx.colors)
+        stats = coloring_mod.color_stats(ctx.colors)
+        ctx.diagnostics.update(
+            n_colors=stats["n_colors"],
+            color_balance=stats["balance"],
+        )
+
+
+class GreedyMapPass(Pass):
+    """Spatial placement (Sec. IV-B): communication-distance-minimizing
+    greedy mapping onto the core mesh."""
+
+    name = "greedy_map"
+
+    def run(self, ctx: PassContext) -> None:
+        ctx.require("adj", "colors")
+        ctx.placement = mapping_mod.greedy_map(
+            ctx.adj, ctx.colors, ctx.mesh_shape
+        )
+        ctx.diagnostics["comm_hops"] = mapping_mod.comm_cost(
+            ctx.adj, ctx.placement
+        )
+
+
+class RandomMapPass(Pass):
+    """Baseline placement (the Fig. 9 'random' column) — drop-in for
+    GreedyMapPass so benchmarks compare schedules, not code paths."""
+
+    name = "random_map"
+
+    def __init__(self, seed: int = 0):
+        self.seed = seed
+
+    def run(self, ctx: PassContext) -> None:
+        ctx.require("adj", "colors")
+        ctx.placement = mapping_mod.random_map(
+            ctx.ir.n_nodes, ctx.mesh_shape, self.seed
+        )
+        ctx.diagnostics["comm_hops"] = mapping_mod.comm_cost(
+            ctx.adj, ctx.placement
+        )
+
+
+class SchedulePass(Pass):
+    """Lower (colors, placement) to the explicit per-color round schedule
+    and record its cycle/byte cost model."""
+
+    name = "schedule"
+
+    def run(self, ctx: PassContext) -> None:
+        ctx.require("adj", "colors", "placement")
+        ctx.schedule = schedule_mod.build_schedule(
+            ctx.ir, ctx.colors, ctx.placement, adj=ctx.adj
+        )
+        schedule_mod.verify_schedule(ctx.ir, ctx.schedule, adj=ctx.adj)
+        ctx.diagnostics["schedule_cost"] = ctx.schedule.cost()
+
+
+def default_pipeline() -> list[Pass]:
+    return [MoralizePass(), DsaturPass(), GreedyMapPass(), SchedulePass()]
+
+
+def random_baseline_pipeline(seed: int = 0) -> list[Pass]:
+    """The Fig. 9 baseline: the default lowering with the greedy placement
+    swapped for a seeded random one.  Kept here so benchmarks/tests compare
+    against the real pipeline even as passes are added."""
+    return [MoralizePass(), DsaturPass(), RandomMapPass(seed), SchedulePass()]
+
+
+def run_pipeline(
+    ir: SamplingGraph,
+    mesh_shape: tuple[int, int] = (4, 4),
+    passes: Sequence[Pass] | None = None,
+) -> PassContext:
+    """Run the (default or custom) pass list over a fresh context."""
+    ctx = PassContext(ir=ir, mesh_shape=mesh_shape)
+    for p in passes if passes is not None else default_pipeline():
+        p(ctx)
+    return ctx

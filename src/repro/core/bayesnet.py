@@ -75,12 +75,16 @@ def compile_bayesnet(
     lut_range: float = 8.0,
     lut_bits: int = 8,
     seed: int = 0,
+    colors: np.ndarray | None = None,
 ) -> CompiledBayesNet:
-    """The AIA compiler chain (Fig. 8): coloring -> mapping -> code(gather) gen."""
+    """Backend code generation (Fig. 8 right half): per-color CPT-gather
+    tensors.  `repro.compile` drives this with the pass pipeline's coloring
+    (`colors=`); called standalone it runs DSATUR itself."""
     bn.validate()
     evidence = dict(evidence or {})
     n = bn.n_nodes
-    colors = coloring_mod.dsatur(bn.moral_adjacency())
+    if colors is None:
+        colors = coloring_mod.dsatur(bn.moral_adjacency())
     assert coloring_mod.verify_coloring(bn.moral_adjacency(), colors)
 
     # flat log-CPT arena; entry 0 is the dummy used by padded factor slots

@@ -1,0 +1,54 @@
+"""JAX version-compat shims.
+
+The codebase targets the current JAX API (`jax.shard_map`,
+`pltpu.CompilerParams`); older releases (e.g. 0.4.x, the pinned container
+toolchain) spell these `jax.experimental.shard_map.shard_map(check_rep=...)`
+and `pltpu.TPUCompilerParams`.  Everything routes through here so call
+sites stay written against the modern names.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """`jax.shard_map` with graceful fallback to the experimental API
+    (where `check_vma` was called `check_rep`)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma,
+    )
+
+
+def axis_size(axis_name):
+    """`jax.lax.axis_size` fallback: a psum of 1 over the axis is a
+    compile-time constant equal to the axis size on older releases."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def make_mesh(shape, axes) -> jax.sharding.Mesh:
+    """`jax.make_mesh` with explicit Auto axis types where the installed
+    JAX supports them (older releases have neither the kwarg nor the enum,
+    and are Auto-only anyway)."""
+    kwargs = {}
+    if hasattr(jax.sharding, "AxisType"):
+        kwargs["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(tuple(shape), tuple(axes), **kwargs)
+
+
+def tpu_compiler_params(**kwargs):
+    """`pltpu.CompilerParams` (new name) / `pltpu.TPUCompilerParams` (old)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)

@@ -27,6 +27,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core import bayesnet as bnet
+from repro.core import compat
 from repro.core.draws import draw_from_logits
 from repro.core.graphs import GridMRF
 from repro.core.interp import build_exp_weight_lut
@@ -40,7 +41,7 @@ from repro.core.mapping import MeshPlacement
 def _halo_exchange(lab: jax.Array, axis: str) -> tuple[jax.Array, jax.Array]:
     """Send boundary rows to mesh neighbors; returns (up_halo, down_halo) of
     shape (..., 1, W).  Global grid boundary gets -1 (no neighbor)."""
-    n = jax.lax.axis_size(axis)
+    n = compat.axis_size(axis)
     idx = jax.lax.axis_index(axis)
     down_perm = [(i, (i + 1) % n) for i in range(n)]
     up_perm = [(i, (i - 1) % n) for i in range(n)]
@@ -115,7 +116,7 @@ def mrf_gibbs_sharded(
     def body(ev_loc, key):
         ci = jax.lax.axis_index(chain_axes[0])
         for a in chain_axes[1:]:
-            ci = ci * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+            ci = ci * compat.axis_size(a) + jax.lax.axis_index(a)
         gi = jax.lax.axis_index(grid_axis)
         key = jax.random.fold_in(jax.random.fold_in(key, ci), gi)
         k0, key = jax.random.split(key)
@@ -143,7 +144,7 @@ def mrf_gibbs_sharded(
         lab, _ = jax.lax.fori_loop(0, n_iters, it, (lab, key))
         return lab
 
-    f = jax.shard_map(
+    f = compat.shard_map(
         body,
         mesh=mesh,
         in_specs=(P(grid_axis, None), P()),
@@ -286,7 +287,7 @@ def bn_gibbs_sharded(
         hist = jax.lax.psum(hist, chain_axis)
         return hist, vals
 
-    f = jax.shard_map(
+    f = compat.shard_map(
         body,
         mesh=mesh,
         in_specs=(P(),),
@@ -299,3 +300,50 @@ def bn_gibbs_sharded(
     )
     denom = jnp.maximum(hist.sum(-1, keepdims=True), 1)
     return jnp.where(card_mask, hist / denom, 0.0), vals
+
+
+# ---------------------------------------------------------------------------
+# Compiled-program entry point (repro.compile emits CompiledProgram artifacts;
+# this is their shard_map backend — duck-typed to avoid a circular import)
+# ---------------------------------------------------------------------------
+
+
+def run_program_sharded(
+    program,
+    key: jax.Array,
+    mesh: jax.sharding.Mesh,
+    *,
+    n_chains: int = 32,
+    n_iters: int = 200,
+    burn_in: int | None = None,
+    sampler: str = "lut_ky",
+    evidence: jax.Array | None = None,
+    **axes,
+):
+    """Execute a `repro.compile.CompiledProgram` across a device mesh.
+
+    BNs run the psum-broadcast engine with node ownership taken from the
+    program's Sec. IV-B placement; MRFs run the ppermute-halo engine (the
+    row partition *is* the placement for a grid).  Same key, same program
+    => same states as calling these engines directly."""
+    if program.kind == "bn":
+        if evidence is not None:
+            raise ValueError(
+                "BN evidence is baked into the program at compile time"
+            )
+        return bn_gibbs_sharded(
+            program.cbn, key, mesh,
+            n_chains=n_chains, n_iters=n_iters,
+            burn_in=50 if burn_in is None else burn_in,
+            sampler=sampler, placement=program.placement, **axes,
+        )
+    if evidence is None:
+        raise ValueError("MRF programs take the evidence image at run time")
+    if burn_in is not None:
+        raise ValueError(
+            "MRF programs return final states only; burn_in does not apply"
+        )
+    return mrf_gibbs_sharded(
+        program.mrf, evidence, key, mesh,
+        n_chains=n_chains, n_iters=n_iters, sampler=sampler, **axes,
+    )

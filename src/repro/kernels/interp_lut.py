@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import compat
 from repro.core.interp import LUTSpec
 
 DEFAULT_BLOCK_M = 256
@@ -78,7 +79,7 @@ def interp_kernel(
         out_specs=pl.BlockSpec((block_m, n), lambda i: (i, 0),
                                memory_space=pltpu.VMEM),
         out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel",),
         ),
         interpret=interpret,

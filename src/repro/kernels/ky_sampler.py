@@ -33,6 +33,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import compat
+
 LANES = 128
 DEFAULT_BLOCK_B = 256
 
@@ -189,7 +191,7 @@ def ky_sample_kernel(
         in_specs=[spec_b((block_b, LANES)), spec_b((block_b, n_words))],
         out_specs=[spec_b((block_b, 1))] * 4,
         out_shape=out_shape,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("arbitrary",),
         ),
         interpret=interpret,

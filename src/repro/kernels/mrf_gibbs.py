@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import compat
 from repro.core.interp import LUTSpec
 from repro.kernels.interp_lut import interp_eval
 from repro.kernels.ky_sampler import LANES, argmax_fallback, ddg_walk, \
@@ -157,7 +158,7 @@ def mrf_half_step_kernel(
         ],
         out_specs=blk(lambda i: (i, 0), width),
         out_shape=jax.ShapeDtypeStruct((height, width), jnp.int32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("arbitrary",),
         ),
         interpret=interpret,

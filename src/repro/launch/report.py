@@ -1,4 +1,6 @@
-"""Render the dry-run result JSONs into the EXPERIMENTS.md tables."""
+"""Render the dry-run and compile-chain result JSONs into the EXPERIMENTS.md
+tables (`benchmarks/results/dryrun/` and `benchmarks/results/compile/`, the
+latter written by `benchmarks/bench_compile.py`)."""
 
 from __future__ import annotations
 
@@ -84,6 +86,34 @@ def dryrun_table(recs: list[dict]) -> str:
     return "\n".join(rows)
 
 
+def load_compile(results_dir: str) -> list[dict]:
+    return [
+        json.load(open(f))
+        for f in sorted(glob.glob(os.path.join(results_dir, "*.json")))
+    ]
+
+
+def compile_table(recs: list[dict]) -> str:
+    """Per-workload view of the `repro.compile` chain: compile cost, cache
+    behavior, and the schedule the passes chose vs a random placement."""
+    rows = [
+        "| workload | kind | nodes | colors | compile cold | cache hit | "
+        "hit rate | sweep cycles | vs random | hop-bytes | vs random |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(recs, key=lambda r: (r["kind"], r["n_nodes"])):
+        cyc_win = r["random_sweep_cycles"] / max(r["sweep_cycles"], 1)
+        hop_win = r["random_hop_bytes"] / max(r["comm_hop_bytes"], 1)
+        rows.append(
+            f"| {r['workload']} | {r['kind']} | {r['n_nodes']} "
+            f"| {r['n_colors']} | {r['compile_cold_ms']:.1f}ms "
+            f"| {r['compile_warm_us']:.0f}us | {r['cache_hit_rate']:.2f} "
+            f"| {r['sweep_cycles']} | {cyc_win:.2f}x "
+            f"| {r['comm_hop_bytes']} | {hop_win:.2f}x |"
+        )
+    return "\n".join(rows)
+
+
 def bottleneck_notes(recs: list[dict]) -> str:
     """One sentence per (arch, cell) on what would move the dominant term."""
     notes = {
@@ -126,3 +156,8 @@ if __name__ == "__main__":
     print(roofline_table(recs, "single"))
     print("\n## Dry-run detail\n")
     print(dryrun_table(recs))
+    cdir = os.path.join(os.path.dirname(d), "compile")
+    crecs = load_compile(cdir) if os.path.isdir(cdir) else []
+    if crecs:
+        print("\n## Compile chain (repro.compile)\n")
+        print(compile_table(crecs))

@@ -1,0 +1,251 @@
+"""repro.compile: IR hashing, pass-pipeline determinism, schedule legality,
+program-cache behavior, and compiled-vs-eager bit-exactness."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compile import (
+    compile_graph,
+    cache_stats,
+    clear_program_cache,
+    run_pipeline,
+)
+from repro.compile import ir as compile_ir
+from repro.compile.passes import random_baseline_pipeline
+from repro.compile.schedule import verify_schedule
+from repro.core import bayesnet as bnet
+from repro.core import mrf as mrf_mod
+from repro.core.graphs import GridMRF, bn_repository_replica, random_bayesnet
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    clear_program_cache()
+    yield
+    clear_program_cache()
+
+
+# ---------------------------------------------------------------------------
+# IR canonicalization + stable hashing
+# ---------------------------------------------------------------------------
+
+
+def test_ir_hash_deterministic():
+    """Same graph -> same program hash, across independent constructions."""
+    a = compile_ir.from_bayesnet(random_bayesnet(12, seed=3), {1: 0})
+    b = compile_ir.from_bayesnet(random_bayesnet(12, seed=3), {1: 0})
+    assert a.ir_key == b.ir_key
+    m1 = compile_ir.from_mrf(GridMRF(8, 8, 3, theta=1.2))
+    m2 = compile_ir.from_mrf(GridMRF(8, 8, 3, theta=1.2))
+    assert m1.ir_key == m2.ir_key
+
+
+def test_ir_hash_sensitivity():
+    """Structure, parameters, and evidence all feed the hash."""
+    base = compile_ir.from_bayesnet(random_bayesnet(12, seed=3))
+    other_seed = compile_ir.from_bayesnet(random_bayesnet(12, seed=4))
+    with_ev = compile_ir.from_bayesnet(random_bayesnet(12, seed=3), {1: 0})
+    keys = {base.ir_key, other_seed.ir_key, with_ev.ir_key}
+    assert len(keys) == 3
+    assert (
+        compile_ir.from_mrf(GridMRF(8, 8, 3, theta=1.2)).ir_key
+        != compile_ir.from_mrf(GridMRF(8, 8, 3, theta=1.3)).ir_key
+    )
+
+
+def test_ir_conflict_graph_matches_moral_graph():
+    bn = random_bayesnet(15, max_parents=3, seed=2)
+    assert compile_ir.from_bayesnet(bn).adjacency() == bn.moral_adjacency()
+
+
+def test_mrf_evidence_rejected_at_compile_time():
+    with pytest.raises(ValueError):
+        compile_ir.canonicalize(GridMRF(4, 4, 2), {0: 1})
+
+
+# ---------------------------------------------------------------------------
+# Pass pipeline + schedule
+# ---------------------------------------------------------------------------
+
+
+def test_pipeline_deterministic():
+    """Two runs of the pipeline agree on every artifact (same program)."""
+    graph = compile_ir.from_bayesnet(bn_repository_replica("insurance"))
+    c1 = run_pipeline(graph)
+    c2 = run_pipeline(graph)
+    np.testing.assert_array_equal(c1.colors, c2.colors)
+    np.testing.assert_array_equal(
+        c1.placement.placement, c2.placement.placement
+    )
+    assert c1.schedule == c2.schedule
+    assert set(c1.pass_times_s) == {
+        "moralize", "dsatur", "greedy_map", "schedule"
+    }
+
+
+@pytest.mark.parametrize("workload", ["alarm", "hepar2"])
+def test_schedule_legality_bn(workload):
+    """No round may contain two adjacent RVs; rounds partition free RVs."""
+    graph = compile_ir.from_bayesnet(bn_repository_replica(workload), {0: 0})
+    ctx = run_pipeline(graph)
+    verify_schedule(graph, ctx.schedule)  # raises on violation
+    adj = graph.adjacency()
+    for r in ctx.schedule.rounds:
+        s = set(r.nodes)
+        assert all(not (adj[u] & s) for u in r.nodes)
+
+
+def test_schedule_legality_mrf_checkerboard():
+    """A 4-connected grid schedules as exactly two checkerboard rounds."""
+    mrf = GridMRF(8, 8, 2)
+    graph = compile_ir.from_mrf(mrf)
+    ctx = run_pipeline(graph)
+    verify_schedule(graph, ctx.schedule)
+    assert len(ctx.schedule.rounds) == 2
+    parity = mrf.checkerboard_colors().reshape(-1)
+    for r in ctx.schedule.rounds:
+        assert len({parity[v] for v in r.nodes}) == 1
+
+
+def test_schedule_comm_ops_name_paper_mechanisms():
+    bn_ctx = run_pipeline(
+        compile_ir.from_bayesnet(bn_repository_replica("alarm")))
+    mrf_ctx = run_pipeline(compile_ir.from_mrf(GridMRF(8, 8, 3)))
+    bn_ops = [op for r in bn_ctx.schedule.rounds for op in r.comm]
+    mrf_ops = [op for r in mrf_ctx.schedule.rounds for op in r.comm]
+    assert bn_ops and all(op.mechanism == "psum_broadcast" for op in bn_ops)
+    assert mrf_ops and all(op.mechanism == "ppermute_halo" for op in mrf_ops)
+    cost = bn_ctx.schedule.cost()
+    assert cost["total_bytes"] > 0 and cost["total_cycles"] > 0
+
+
+def test_greedy_schedule_beats_random_placement():
+    """Acceptance: compiled schedule comm-cost <= random-placement baseline."""
+    for graph in (
+        compile_ir.from_bayesnet(bn_repository_replica("alarm")),
+        compile_ir.from_mrf(GridMRF(16, 16, 3)),
+    ):
+        greedy = run_pipeline(graph).schedule.cost()
+        rand = [
+            run_pipeline(graph, passes=random_baseline_pipeline(s))
+            .schedule.cost()
+            for s in range(3)
+        ]
+        assert greedy["total_hop_bytes"] <= min(
+            c["total_hop_bytes"] for c in rand
+        )
+
+
+# ---------------------------------------------------------------------------
+# CompiledProgram: cache + bit-exactness vs the eager engines
+# ---------------------------------------------------------------------------
+
+
+def test_program_cache_hits_and_keying():
+    bn = random_bayesnet(10, seed=5)
+    p1 = compile_graph(bn)
+    p2 = compile_graph(bn)
+    assert p2 is p1
+    assert cache_stats()["hits"] == 1
+    p3 = compile_graph(bn, evidence={2: 0})  # different program
+    assert p3 is not p1
+    stats = cache_stats()
+    assert stats["misses"] == 2 and stats["size"] == 2
+    assert stats["hit_rate"] == pytest.approx(1 / 3)
+    assert compile_graph(bn, cache=False) is not p1  # bypass
+
+
+def test_compiled_bn_bit_exact_with_eager():
+    """Same PRNG key: compiled program == eager chromatic Gibbs, bit for bit."""
+    bn = random_bayesnet(12, max_parents=3, cards=(2, 3), seed=7)
+    ev = {1: 0}
+    prog = compile_graph(bn, evidence=ev)
+    marg_c, vals_c = prog.run(
+        jax.random.key(4), n_chains=16, n_iters=60, burn_in=10)
+    cbn = bnet.compile_bayesnet(bn, evidence=ev)
+    marg_e, vals_e = bnet.run_gibbs(
+        cbn, jax.random.key(4), n_chains=16, n_iters=60, burn_in=10)
+    np.testing.assert_array_equal(np.asarray(vals_c), np.asarray(vals_e))
+    np.testing.assert_array_equal(np.asarray(marg_c), np.asarray(marg_e))
+
+
+def test_compiled_mrf_bit_exact_with_eager():
+    mrf = GridMRF(16, 16, 3, theta=1.2, h=2.0)
+    _, noisy = mrf_mod.make_denoising_problem(16, 16, 3, 0.25, seed=0)
+    ev = jnp.asarray(noisy)
+    prog = compile_graph(mrf)
+    lab_c = prog.run(jax.random.key(2), n_chains=2, n_iters=15, evidence=ev)
+    lab_e = mrf_mod.run_mrf_gibbs(
+        mrf, ev, jax.random.key(2), n_chains=2, n_iters=15)
+    np.testing.assert_array_equal(np.asarray(lab_c), np.asarray(lab_e))
+
+
+def test_program_run_argument_validation():
+    prog_bn = compile_graph(random_bayesnet(6, seed=0))
+    with pytest.raises(ValueError):
+        prog_bn.run(jax.random.key(0), evidence=jnp.zeros((2, 2), jnp.int32))
+    prog_mrf = compile_graph(GridMRF(4, 4, 2))
+    with pytest.raises(ValueError):
+        prog_mrf.run(jax.random.key(0))
+    with pytest.raises(ValueError):  # burn_in has no MRF meaning: not dropped
+        prog_mrf.run(
+            jax.random.key(0), burn_in=5,
+            evidence=jnp.zeros((4, 4), jnp.int32),
+        )
+
+
+def test_schedule_rounds_match_backend_groups():
+    """The cross-check the program relies on for bit-exactness."""
+    bn = bn_repository_replica("insurance")
+    prog = compile_graph(bn, evidence={3: 1})
+    assert len(prog.cbn.groups) == len(prog.schedule.rounds)
+    for g, r in zip(prog.cbn.groups, prog.schedule.rounds):
+        assert tuple(int(v) for v in np.asarray(g.nodes)) == r.nodes
+
+
+@pytest.mark.slow
+def test_program_run_sharded_8dev():
+    """run_sharded executes the same program via shard_map (subprocess with
+    8 simulated host devices, mirroring test_distributed_pm)."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+    from pathlib import Path
+
+    script = textwrap.dedent(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.compile import compile_graph
+        from repro.core import bayesnet as bnet
+        from repro.core.distributed import bn_gibbs_sharded
+        from repro.core.graphs import random_bayesnet
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        bn = random_bayesnet(12, max_parents=3, cards=(2, 3), seed=3)
+        prog = compile_graph(bn, evidence={1: 0})
+        marg_p, vals_p = prog.run_sharded(jax.random.key(1), mesh,
+                                          n_chains=16, n_iters=50, burn_in=10)
+        cbn = bnet.compile_bayesnet(bn, evidence={1: 0})
+        marg_e, vals_e = bn_gibbs_sharded(cbn, jax.random.key(1), mesh,
+                                          n_chains=16, n_iters=50, burn_in=10,
+                                          placement=prog.placement)
+        assert (np.asarray(vals_p) == np.asarray(vals_e)).all()
+        assert (np.asarray(marg_p) == np.asarray(marg_e)).all()
+        print("PROGRAM_SHARDED_OK")
+        """
+    )
+    root = Path(__file__).resolve().parent.parent
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(root / "src")
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run(
+        [sys.executable, "-c", script], env=env, capture_output=True,
+        text=True, timeout=900,
+    )
+    assert res.returncode == 0, res.stderr[-3000:]
+    assert "PROGRAM_SHARDED_OK" in res.stdout

@@ -42,8 +42,10 @@ _SCRIPT = textwrap.dedent(
     want2 = 10 * 2 * M * K * K
     assert abs(c2.flops - want2) / want2 < 0.01, (c2.flops, want2)
     # ... and XLA's own analysis indeed undercounts (sanity of premise)
-    xla = float(comp2.cost_analysis()["flops"])
-    assert xla < 0.2 * want2
+    xla = comp2.cost_analysis()
+    if isinstance(xla, list):  # older jax: one record per device
+        xla = xla[0]
+    assert float(xla["flops"]) < 0.2 * want2
 
     # nested scan: multipliers compose
     def nested(a, ws):
@@ -62,8 +64,8 @@ _SCRIPT = textwrap.dedent(
     assert abs(c3.flops - want3) / want3 < 0.02, (c3.flops, want3)
 
     # collective bytes: all-reduce of a (1024,) f32 row
-    mesh = jax.make_mesh((8,), ("x",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.core import compat
+    mesh = compat.make_mesh((8,), ("x",))
     f4 = jax.jit(lambda a: a.sum(0),
                  in_shardings=(NamedSharding(mesh, P("x", None)),),
                  out_shardings=NamedSharding(mesh, P(None)))

@@ -4,8 +4,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:  # hypothesis is optional (offline containers): property tests skip
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core import ky
 from repro.kernels import ops
@@ -98,20 +104,32 @@ def test_scale_to_fill_reduces_rejection():
     assert not bool(stats["fallback"].any())
 
 
-@settings(max_examples=30, deadline=None)
-@given(
-    st.lists(st.integers(0, 1000), min_size=2, max_size=64).filter(
-        lambda ws: sum(ws) > 0
-    ),
-    st.integers(0, 2**31 - 1),
-)
-def test_property_labels_valid_and_supported(weights, seed):
-    """Any weight vector: labels in range and only positive-weight bins."""
+def _check_labels_valid_and_supported(weights, seed):
     n = len(weights)
     w = jnp.tile(jnp.asarray(weights, jnp.int32), (64, 1))
     labels = np.asarray(ops.ky_sample(w, jax.random.key(seed)))
     assert ((labels >= 0) & (labels < n)).all()
     assert all(weights[l] > 0 for l in labels)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        st.lists(st.integers(0, 1000), min_size=2, max_size=64).filter(
+            lambda ws: sum(ws) > 0
+        ),
+        st.integers(0, 2**31 - 1),
+    )
+    def test_property_labels_valid_and_supported(weights, seed):
+        """Any weight vector: labels in range and only positive-weight bins."""
+        _check_labels_valid_and_supported(weights, seed)
+
+else:
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_property_labels_valid_and_supported():
+        pass
 
 
 def test_ddg_matrix_invariant():
