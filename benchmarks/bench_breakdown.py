@@ -21,10 +21,7 @@ def run(quick: bool = False):
         cbn = bnet.compile_bayesnet(bn)
         n_chains = 64
         key = jax.random.key(0)
-        rnd = jax.random.randint(
-            key, (n_chains, cbn.n_nodes), 0, 1 << 30, jnp.int32
-        ) % jnp.maximum(cbn.cards[None], 1)
-        vals = jnp.where(cbn.free_mask[None], rnd, cbn.init_vals[None])
+        vals, _ = bnet.init_chain_values(cbn, key, n_chains)
         g = max(cbn.groups, key=lambda gr: gr.nodes.shape[0])
 
         @jax.jit

@@ -1,10 +1,14 @@
-"""Compile-chain benchmark: compile time, program-cache hit rate, and the
-schedule's comm cost under the greedy placement vs a random baseline.
+"""Compile-chain benchmark: compile time, program-cache hit rate, the
+schedule's comm cost under the greedy placement vs a random baseline, and —
+since the schedule-direct backend landed — eager-vs-schedule execution
+wall-clock plus the cost model's predicted-cycle vs measured-time
+correlation for greedy and random placements.
 
 This is the serving-facing view of `repro.compile`: a repeated workload
-should pay the pass pipeline once (cache hit ~ dict lookup), and the
-schedule the pipeline picks should move fewer bytes x hops than a random
-placement of the same colored graph.
+should pay the pass pipeline once (cache hit ~ dict lookup), the schedule
+the pipeline picks should move fewer bytes x hops than a random placement
+of the same colored graph, and executing the schedule directly should cost
+no more than delegating to the eager engines.
 
 Writes one JSON record per workload to ``benchmarks/results/compile/`` so
 ``launch/report.py`` can render the compile table without re-running.
@@ -12,11 +16,19 @@ Writes one JSON record per workload to ``benchmarks/results/compile/`` so
 
 from __future__ import annotations
 
+import argparse
 import json
 import os
+import sys
 import time
 
+import jax
+import jax.numpy as jnp
 import numpy as np
+
+if __package__ in (None, ""):  # `python benchmarks/bench_compile.py`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
 
 from benchmarks.common import csv_row
 from repro.compile import (
@@ -45,9 +57,39 @@ def _graphs(quick: bool):
     return graphs
 
 
-def run(quick: bool = False):
+def _time_run(prog, backend: str, *, n_chains: int, n_iters: int):
+    """Steady-state seconds per Gibbs sweep for one backend (first call —
+    jit compile + the schedule backend's one-time cross-check — untimed)."""
+    key = jax.random.key(0)
+    if prog.kind == "bn":
+        run = lambda: prog.run(
+            key, n_chains=n_chains, n_iters=n_iters, burn_in=0,
+            backend=backend,
+        )[1]
+    else:
+        ev = jnp.zeros((prog.mrf.height, prog.mrf.width), jnp.int32)
+        run = lambda: prog.run(
+            key, n_chains=n_chains, n_iters=n_iters, evidence=ev,
+            backend=backend,
+        )
+    jax.block_until_ready(run())  # warmup
+    t0 = time.perf_counter()
+    jax.block_until_ready(run())
+    return (time.perf_counter() - t0) / n_iters
+
+
+def _pearson(xs, ys) -> float:
+    if len(xs) < 2 or np.std(xs) == 0 or np.std(ys) == 0:
+        return float("nan")
+    return float(np.corrcoef(xs, ys)[0, 1])
+
+
+def run(quick: bool = False, backend: str = "schedule"):
     rows = []
     os.makedirs(RESULTS_DIR, exist_ok=True)
+    n_chains, n_iters = (8, 10) if quick else (16, 25)
+    # (predicted total_cycles, measured s/sweep) pairs per placement family
+    corr_pairs = {"greedy": [], "random": []}
     for graph in _graphs(quick):
         clear_program_cache()
         t0 = time.perf_counter()
@@ -61,15 +103,29 @@ def run(quick: bool = False):
         stats = cache_stats()
 
         cost = prog.schedule.cost()
-        rand_costs = [
-            run_pipeline(
-                graph, mesh_shape=(4, 4), passes=random_baseline_pipeline(s),
-            ).schedule.cost()
+        rand_progs = [
+            compile_graph(
+                graph, passes=random_baseline_pipeline(s), cache=False
+            )
             for s in range(3)
         ]
+        rand_costs = [p.schedule.cost() for p in rand_progs]
         rand_hop_bytes = float(np.mean(
             [c["total_hop_bytes"] for c in rand_costs]))
         rand_cycles = float(np.mean([c["total_cycles"] for c in rand_costs]))
+
+        # backend execution: eager vs schedule wall-clock on the greedy
+        # program, plus the cost model's prediction vs the measured time of
+        # the benchmarked backend under both placements
+        eager_s = _time_run(prog, "eager", n_chains=n_chains, n_iters=n_iters)
+        sched_s = _time_run(
+            prog, "schedule", n_chains=n_chains, n_iters=n_iters)
+        measured_s = sched_s if backend == "schedule" else eager_s
+        rand_measured_s = _time_run(
+            rand_progs[0], backend, n_chains=n_chains, n_iters=n_iters)
+        corr_pairs["greedy"].append((cost["total_cycles"], measured_s))
+        corr_pairs["random"].append(
+            (rand_costs[0]["total_cycles"], rand_measured_s))
 
         rec = {
             "workload": graph.name,
@@ -85,6 +141,10 @@ def run(quick: bool = False):
             "comm_hop_bytes": cost["total_hop_bytes"],
             "random_hop_bytes": rand_hop_bytes,
             "random_sweep_cycles": rand_cycles,
+            "exec_backend": backend,
+            "eager_sweep_s": eager_s,
+            "schedule_sweep_s": sched_s,
+            "random_measured_sweep_s": rand_measured_s,
             "pass_times_s": prog.diagnostics["pass_times_s"],
         }
         with open(os.path.join(RESULTS_DIR, f"{graph.name}.json"), "w") as f:
@@ -92,6 +152,11 @@ def run(quick: bool = False):
 
         assert cost["total_hop_bytes"] <= rand_hop_bytes, (
             graph.name, cost["total_hop_bytes"], rand_hop_bytes)
+        # placement-aware compute cost: the greedy placement's critical path
+        # must not exceed the random baseline's (it balances per-core load)
+        assert cost["compute_cycles"] <= max(
+            c["compute_cycles"] for c in rand_costs
+        ), graph.name
         rows.append(csv_row(
             f"compile_{graph.name}", cold_s * 1e6,
             f"kind={graph.kind};nodes={graph.n_nodes};"
@@ -100,10 +165,28 @@ def run(quick: bool = False):
             f"hop_bytes={cost['total_hop_bytes']};"
             f"random_hop_bytes={rand_hop_bytes:.0f};"
             f"sweep_cycles={cost['total_cycles']};"
-            f"random_sweep_cycles={rand_cycles:.0f}",
+            f"random_sweep_cycles={rand_cycles:.0f};"
+            f"eager_sweep_us={eager_s*1e6:.0f};"
+            f"schedule_sweep_us={sched_s*1e6:.0f}",
+        ))
+
+    for fam, pairs in corr_pairs.items():
+        pred, meas = zip(*pairs)
+        r = _pearson(np.log(pred), np.log(meas))
+        rows.append(csv_row(
+            f"compile_cycle_corr_{fam}", 0.0,
+            f"backend={backend};pearson_r_log={r:.3f};n={len(pairs)};"
+            f"pred_cycles={','.join(str(p) for p in pred)}",
         ))
     return rows
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--backend", default="schedule",
+                    choices=["eager", "schedule"],
+                    help="execution backend measured for the predicted-vs-"
+                         "measured cycle correlation")
+    args = ap.parse_args()
+    run(quick=args.quick, backend=args.backend)

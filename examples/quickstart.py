@@ -36,10 +36,12 @@ def main():
     assert prog2 is prog
     print(f"program cache: {cache_stats()['hits']} hit(s)")
 
-    # execute: chromatic parallel Gibbs with LUT-exp (C2) + rejection-KY (C1)
+    # execute: chromatic parallel Gibbs with LUT-exp (C2) + rejection-KY (C1),
+    # running the compiled Schedule's rounds directly (backend="schedule";
+    # bit-exact with backend="eager" — cross-checked at first lowering)
     marginals, _ = prog.run(
         jax.random.key(0), n_chains=64, n_iters=500, burn_in=125,
-        sampler="lut_ky",
+        sampler="lut_ky", backend="schedule",
     )
     approx = np.asarray(marginals)[query][: len(exact)]
 

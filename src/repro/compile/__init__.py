@@ -15,6 +15,16 @@ through an explicit multi-pass pipeline:
 benchmarks, tests, and future passes/backends.
 """
 
+from repro.compile.backend import (
+    BackendMismatch,
+    BNScheduleExec,
+    MRFScheduleExec,
+    ScheduleLoweringError,
+    cross_check,
+    lower_schedule,
+    run_bn_schedule,
+    run_mrf_schedule,
+)
 from repro.compile.ir import SamplingGraph
 from repro.compile.passes import (
     PassContext,
@@ -36,6 +46,14 @@ from repro.compile.schedule import (
 )
 
 __all__ = [
+    "BackendMismatch",
+    "BNScheduleExec",
+    "MRFScheduleExec",
+    "ScheduleLoweringError",
+    "cross_check",
+    "lower_schedule",
+    "run_bn_schedule",
+    "run_mrf_schedule",
     "SamplingGraph",
     "PassContext",
     "default_pipeline",

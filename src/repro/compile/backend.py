@@ -1,0 +1,274 @@
+"""Schedule-direct execution backend: the `Schedule` IS the execution plan.
+
+Until this module existed, `CompiledProgram.run()` delegated to the eager
+Gibbs engines and the round schedule the pass pipeline built was used only
+for cost reporting.  Here the schedule is *lowered* to an executable:
+
+  * BN: one CPT-gather tensor set (`ColorGroup`) per `Round`, built from the
+    round's node list — not from `cbn.groups` — and swept in schedule order
+    inside one jitted loop.  A future pass that merges tiny colors or splits
+    a round changes execution through this lowering alone; `core/bayesnet.py`
+    never hears about it.
+  * MRF: each round is recognized as one checkerboard parity and executed in
+    schedule order.  The default path is the vectorized engine math (bit-
+    exact with eager for every sampler); `fused=True` routes `lut_ky` rounds
+    through the Pallas kernel in `kernels/mrf_gibbs.py` (same random-word
+    derivation as `draw_from_logits`, so still bit-identical).
+
+Bit-exactness with the eager backend is not an aspiration but a checked
+invariant: `cross_check()` runs both backends on a tiny budget and compares
+bits; `CompiledProgram` invokes it the first time a program is lowered (and
+eagerly at compile time under `compile_graph(..., cross_check=True)`).
+
+The sharded counterpart lives in `core/distributed.py`
+(`run_program_sharded(..., backend="schedule")`), which routes each round's
+named comm mechanism onto its collective: `psum_broadcast` -> a per-round
+`lax.psum` of the disjoint state delta, `ppermute_halo` -> the `lax.ppermute`
+boundary exchange.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.compile.schedule import Schedule, verify_schedule
+from repro.core import bayesnet as bnet
+from repro.core import mrf as mrf_mod
+from repro.core.graphs import GridMRF
+from repro.core.interp import build_exp_weight_lut
+from repro.kernels import mrf_gibbs as mrf_kernels
+
+
+class ScheduleLoweringError(RuntimeError):
+    """The schedule cannot be lowered to this backend's execution form."""
+
+
+class BackendMismatch(AssertionError):
+    """The schedule backend produced different bits than the eager engine."""
+
+
+# The schedule's named comm mechanisms and the collective each lowers to in
+# the sharded execution path (core/distributed.py).
+MECHANISM_COLLECTIVES = {
+    "psum_broadcast": "lax.psum",
+    "ppermute_halo": "lax.ppermute",
+}
+
+
+@dataclasses.dataclass
+class BNScheduleExec:
+    """A BN schedule lowered to per-round gather tensors."""
+
+    cbn: bnet.CompiledBayesNet
+    round_groups: list[bnet.ColorGroup]  # one per Round, schedule-ordered
+
+
+@dataclasses.dataclass(frozen=True)
+class MRFScheduleExec:
+    """A grid-MRF schedule lowered to a checkerboard parity sequence."""
+
+    mrf: GridMRF
+    parities: tuple[int, ...]  # per-round parity, schedule-ordered
+
+
+def lower_schedule(program) -> BNScheduleExec | MRFScheduleExec:
+    """Lower a `CompiledProgram`'s schedule into an executable form.
+
+    Legality is re-verified first: round-ordered execution is only correct if
+    the rounds still partition the free RVs with no intra-round conflicts
+    (a buggy future pass must fail here, not corrupt samples)."""
+    ir = program.ir
+    schedule: Schedule = program.schedule
+    verify_schedule(ir, schedule)
+    if ir.kind == "bn":
+        bn = ir.source
+        bases = bnet.cpt_bases(bn)
+        groups = [
+            bnet.build_color_group(bn, list(r.nodes), bases)
+            for r in schedule.rounds
+        ]
+        return BNScheduleExec(cbn=program.cbn, round_groups=groups)
+    mrf = ir.source
+    class_size = {
+        p: sum(
+            (r + c) % 2 == p
+            for r in range(mrf.height) for c in range(mrf.width)
+        )
+        for p in (0, 1)
+    }
+    parities = []
+    for r in schedule.rounds:
+        pars = {(v // mrf.width + v % mrf.width) % 2 for v in r.nodes}
+        if len(pars) != 1:
+            raise ScheduleLoweringError(
+                f"MRF round {r.color} mixes checkerboard parities {pars}; "
+                "the fused grid path needs single-parity rounds"
+            )
+        parity = pars.pop()
+        if len(r.nodes) != class_size[parity]:
+            # the grid path executes whole parity classes; a round holding
+            # only part of one (e.g. from a round-splitting pass) has no
+            # lowering here and must fail loudly, not run the wrong plan
+            raise ScheduleLoweringError(
+                f"MRF round {r.color} covers {len(r.nodes)} of the "
+                f"{class_size[parity]} parity-{parity} sites; partial-parity "
+                "rounds are not loweable by the grid backend"
+            )
+        parities.append(parity)
+    return MRFScheduleExec(mrf=mrf, parities=tuple(parities))
+
+
+# ---------------------------------------------------------------------------
+# BN: round-ordered jitted sweep
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_chains", "n_iters", "burn_in", "sampler")
+)
+def _run_bn_rounds(
+    cbn, round_groups, key, *, n_chains, n_iters, burn_in, sampler
+):
+    vals, key = bnet.init_chain_values(cbn, key, n_chains)
+    return bnet.gibbs_run_loop(
+        cbn, round_groups, vals, key, n_iters, burn_in, sampler
+    )
+
+
+def run_bn_schedule(
+    ex: BNScheduleExec,
+    key: jax.Array,
+    *,
+    n_chains: int = 32,
+    n_iters: int = 200,
+    burn_in: int = 50,
+    sampler: str = "lut_ky",
+):
+    """Execute a lowered BN schedule; same contract as `bayesnet.run_gibbs`
+    (returns (marginals (n, V), final vals))."""
+    return _run_bn_rounds(
+        ex.cbn, ex.round_groups, key,
+        n_chains=n_chains, n_iters=n_iters, burn_in=burn_in, sampler=sampler,
+    )
+
+
+# ---------------------------------------------------------------------------
+# MRF: schedule-ordered rounds, optionally fused through the Pallas kernel
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "mrf", "parities", "n_chains", "n_iters", "sampler", "fused",
+        "interpret",
+    ),
+)
+def _run_mrf_rounds(
+    mrf, parities, evidence, key, *, n_chains, n_iters, sampler, fused,
+    interpret,
+):
+    exp_table, exp_spec = build_exp_weight_lut()
+    k0, key = jax.random.split(key)
+    labels = jax.random.randint(
+        k0, (n_chains, mrf.height, mrf.width), 0, mrf.n_labels, jnp.int32
+    )
+
+    def body(t, carry):
+        labels, key = carry
+        ks = jax.random.split(key, 1 + len(parities))
+        for i, parity in enumerate(parities):
+            if fused:
+                labels = mrf_kernels.mrf_round_step(
+                    mrf, labels, evidence, ks[1 + i], parity,
+                    exp_table, exp_spec, interpret=interpret,
+                )
+            else:
+                labels = mrf_mod.half_step(
+                    mrf, labels, evidence, ks[1 + i], parity, sampler,
+                    exp_table, exp_spec,
+                )
+        return labels, ks[0]
+
+    labels, _ = jax.lax.fori_loop(0, n_iters, body, (labels, key))
+    return labels
+
+
+def run_mrf_schedule(
+    ex: MRFScheduleExec,
+    evidence: jax.Array,
+    key: jax.Array,
+    *,
+    n_chains: int = 32,
+    n_iters: int = 200,
+    sampler: str = "lut_ky",
+    fused: bool = False,
+):
+    """Execute a lowered MRF schedule; same contract as `mrf.run_mrf_gibbs`
+    (returns final labels (B, H, W)).
+
+    `fused=True` drives the rounds through the Pallas half-step kernel
+    (lut_ky only — the kernel hard-codes the C1+C2 datapath); random words
+    are derived exactly as `draw_from_logits` derives them, so the fused
+    path stays bit-identical to the eager engine."""
+    if fused and sampler != "lut_ky":
+        raise ValueError(
+            f"fused schedule rounds implement the lut_ky datapath only, "
+            f"got sampler={sampler!r}"
+        )
+    interpret = jax.default_backend() != "tpu"
+    return _run_mrf_rounds(
+        ex.mrf, ex.parities, evidence, key,
+        n_chains=n_chains, n_iters=n_iters, sampler=sampler, fused=fused,
+        interpret=interpret,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Bit-exactness cross-check between the two backends
+# ---------------------------------------------------------------------------
+
+_CHECK_KEY = 0xA1A  # fixed: the check must be deterministic per program
+_CHECK_CHAINS = 2
+_CHECK_ITERS = 3
+
+
+def cross_check(program, ex=None) -> None:
+    """Run both backends on a tiny budget and require identical bits.
+
+    Raises `BackendMismatch` on any divergence — a cached program whose
+    schedule execution drifted from the eager engines must never serve."""
+    import numpy as np
+
+    ex = lower_schedule(program) if ex is None else ex
+    key = jax.random.key(_CHECK_KEY)
+    if program.kind == "bn":
+        marg_e, vals_e = bnet.run_gibbs(
+            program.cbn, key, n_chains=_CHECK_CHAINS, n_iters=_CHECK_ITERS,
+            burn_in=0,
+        )
+        marg_s, vals_s = run_bn_schedule(
+            ex, key, n_chains=_CHECK_CHAINS, n_iters=_CHECK_ITERS, burn_in=0,
+        )
+        same = (np.asarray(vals_e) == np.asarray(vals_s)).all() and (
+            np.asarray(marg_e) == np.asarray(marg_s)
+        ).all()
+    else:
+        mrf = program.mrf
+        ev = jnp.zeros((mrf.height, mrf.width), jnp.int32)
+        lab_e = mrf_mod.run_mrf_gibbs(
+            mrf, ev, key, n_chains=_CHECK_CHAINS, n_iters=_CHECK_ITERS,
+        )
+        lab_s = run_mrf_schedule(
+            ex, ev, key, n_chains=_CHECK_CHAINS, n_iters=_CHECK_ITERS,
+        )
+        same = (np.asarray(lab_e) == np.asarray(lab_s)).all()
+    if not same:
+        raise BackendMismatch(
+            f"schedule backend diverged from eager on program "
+            f"{program.program_key[:12]} ({program.kind})"
+        )

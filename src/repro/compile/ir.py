@@ -27,6 +27,14 @@ import numpy as np
 from repro.core.graphs import DiscreteBayesNet, GridMRF
 
 
+def _hash_field(h, tag: str, data: bytes) -> None:
+    """Domain-separated hashing: tag + 8-byte length prefix + payload, so no
+    two field byte-streams can be re-split into a colliding message."""
+    h.update(tag.encode())
+    h.update(len(data).to_bytes(8, "little"))
+    h.update(data)
+
+
 @dataclasses.dataclass(frozen=True)
 class SamplingGraph:
     """Canonical conflict-graph IR for a discrete sampling workload."""
@@ -52,21 +60,32 @@ class SamplingGraph:
 
     @functools.cached_property
     def ir_key(self) -> str:
-        """Stable content hash: structure + numeric parameters + evidence."""
+        """Stable content hash: structure + numeric parameters + evidence.
+
+        Every field is hashed as tag + length + bytes (`_hash_field`): a bare
+        concatenation of the byte streams would let distinct `(cards, edges,
+        evidence)` splits collide — e.g. one edge vs the same two ints read
+        as an evidence pair."""
         h = hashlib.sha256()
-        h.update(self.kind.encode())
-        h.update(np.asarray(self.cards, np.int64).tobytes())
-        h.update(np.asarray(self.edges, np.int64).tobytes())
-        h.update(np.asarray(self.evidence, np.int64).tobytes())
+        _hash_field(h, "kind", self.kind.encode())
+        _hash_field(h, "cards", np.asarray(self.cards, np.int64).tobytes())
+        _hash_field(h, "edges", np.asarray(self.edges, np.int64).tobytes())
+        _hash_field(
+            h, "evidence", np.asarray(self.evidence, np.int64).tobytes()
+        )
         if isinstance(self.source, DiscreteBayesNet):
             for ps, cpt in zip(self.source.parents, self.source.cpts):
-                h.update(np.asarray(ps, np.int64).tobytes())
-                h.update(np.ascontiguousarray(cpt, np.float64).tobytes())
+                _hash_field(h, "parents", np.asarray(ps, np.int64).tobytes())
+                _hash_field(
+                    h, "cpt",
+                    np.ascontiguousarray(cpt, np.float64).tobytes(),
+                )
         else:
             m = self.source
-            h.update(
+            _hash_field(
+                h, "mrf",
                 f"{m.height},{m.width},{m.n_labels},{m.theta!r},"
-                f"{m.h!r},{m.data_cost}".encode()
+                f"{m.h!r},{m.data_cost}".encode(),
             )
         return h.hexdigest()
 

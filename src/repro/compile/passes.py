@@ -142,6 +142,18 @@ class SchedulePass(Pass):
         )
         schedule_mod.verify_schedule(ctx.ir, ctx.schedule, adj=ctx.adj)
         ctx.diagnostics["schedule_cost"] = ctx.schedule.cost()
+        # placement quality at a glance: the worst per-core node count of
+        # any round (what compute_cycles charges) vs the balanced ideal
+        ctx.diagnostics["critical_core_load"] = max(
+            (max(r.core_load) for r in ctx.schedule.rounds), default=0
+        )
+        ctx.diagnostics["balanced_core_load"] = max(
+            (
+                -(-len(r.nodes) // ctx.schedule.n_cores)
+                for r in ctx.schedule.rounds
+            ),
+            default=0,
+        )
 
 
 def default_pipeline() -> list[Pass]:

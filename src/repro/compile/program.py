@@ -26,6 +26,7 @@ import time
 import jax
 import numpy as np
 
+from repro.compile import backend as backend_mod
 from repro.compile import ir as ir_mod
 from repro.compile import passes as passes_mod
 from repro.compile.schedule import Schedule
@@ -44,6 +45,8 @@ class CompiledProgram:
     diagnostics: dict
     cbn: bnet.CompiledBayesNet | None = None  # BN backend artifact
     compile_s: float = 0.0
+    # lazily lowered + cross-checked schedule-direct executable
+    _schedule_exec: object = dataclasses.field(default=None, repr=False)
 
     @property
     def program_key(self) -> str:
@@ -58,6 +61,18 @@ class CompiledProgram:
         assert self.kind == "mrf"
         return self.ir.source
 
+    def schedule_executable(self):
+        """The schedule lowered for direct execution (cached per program).
+
+        The first lowering runs the backend cross-check: a tiny run of both
+        backends must agree bit for bit before the schedule backend is ever
+        trusted with real work."""
+        if self._schedule_exec is None:
+            ex = backend_mod.lower_schedule(self)
+            backend_mod.cross_check(self, ex)
+            self._schedule_exec = ex
+        return self._schedule_exec
+
     def run(
         self,
         key: jax.Array,
@@ -67,27 +82,52 @@ class CompiledProgram:
         burn_in: int | None = None,
         sampler: str = "lut_ky",
         evidence: jax.Array | None = None,
+        backend: str = "eager",
+        fused: bool = False,
     ):
         """Single-device jitted execution.
 
         BN: returns (marginals (n, V), final vals) — evidence was baked at
         compile time; `burn_in` defaults to 50.  MRF: `evidence` is the
         runtime observation image; returns final labels (B, H, W) and has
-        no burn-in concept (passing one raises rather than being dropped)."""
+        no burn-in concept (passing one raises rather than being dropped).
+
+        `backend` picks the execution path: "eager" delegates to the eager
+        Gibbs engines; "schedule" executes the compiled `Schedule`'s rounds
+        directly (bit-exact — cross-checked at first lowering).  `fused`
+        additionally routes MRF schedule rounds through the Pallas kernel
+        (lut_ky only)."""
+        if backend not in ("eager", "schedule"):
+            raise ValueError(f"unknown backend {backend!r}")
+        if fused and backend != "schedule":
+            raise ValueError("fused execution requires backend='schedule'")
         if self.kind == "bn":
             if evidence is not None:
                 raise ValueError(
                     "BN evidence is baked into the program at compile time"
                 )
+            if fused:
+                raise ValueError("fused rounds are an MRF-only path")
+            burn_in = 50 if burn_in is None else burn_in
+            if backend == "schedule":
+                return backend_mod.run_bn_schedule(
+                    self.schedule_executable(), key, n_chains=n_chains,
+                    n_iters=n_iters, burn_in=burn_in, sampler=sampler,
+                )
             return bnet.run_gibbs(
                 self.cbn, key, n_chains=n_chains, n_iters=n_iters,
-                burn_in=50 if burn_in is None else burn_in, sampler=sampler,
+                burn_in=burn_in, sampler=sampler,
             )
         if evidence is None:
             raise ValueError("MRF programs take the evidence image at run()")
         if burn_in is not None:
             raise ValueError(
                 "MRF programs return final states only; burn_in does not apply"
+            )
+        if backend == "schedule":
+            return backend_mod.run_mrf_schedule(
+                self.schedule_executable(), evidence, key, n_chains=n_chains,
+                n_iters=n_iters, sampler=sampler, fused=fused,
             )
         return mrf_mod.run_mrf_gibbs(
             self.mrf, evidence, key, n_chains=n_chains, n_iters=n_iters,
@@ -104,13 +144,17 @@ class CompiledProgram:
         burn_in: int | None = None,
         sampler: str = "lut_ky",
         evidence: jax.Array | None = None,
+        backend: str = "eager",
         **axes,
     ):
         """shard_map execution across a device mesh; node ownership follows
-        this program's placement (see distributed.run_program_sharded)."""
+        this program's placement (see distributed.run_program_sharded).
+        With backend="schedule", rounds come from this program's schedule and
+        each round's comm op is routed onto its named collective."""
         return dist_mod.run_program_sharded(
             self, key, mesh, n_chains=n_chains, n_iters=n_iters,
-            burn_in=burn_in, sampler=sampler, evidence=evidence, **axes,
+            burn_in=burn_in, sampler=sampler, evidence=evidence,
+            backend=backend, **axes,
         )
 
 
@@ -162,19 +206,33 @@ def compile_graph(
     mesh_shape: tuple[int, int] = (4, 4),
     passes=None,
     cache: bool = True,
+    cross_check: bool = False,
 ) -> CompiledProgram:
     """Front door of the compile chain: model -> IR -> passes -> program.
 
     With `cache=True` (default) programs are memoized by the IR content
     hash and mesh shape; custom `passes` bypass the cache (they may not be
-    the default lowering)."""
-    graph = (
-        model
-        if isinstance(model, ir_mod.SamplingGraph)
-        else ir_mod.canonicalize(model, evidence)
-    )
+    the default lowering).  `cross_check=True` lowers the schedule-direct
+    backend at compile time and bit-checks it against the eager engines
+    (otherwise the check runs at the backend's first use)."""
+    if isinstance(model, ir_mod.SamplingGraph):
+        if evidence:
+            # silently dropping it would compile a different program than
+            # the caller asked for — evidence belongs to the IR (BN) or to
+            # run() (MRF), never to an already-canonicalized graph
+            raise ValueError(
+                "evidence must be baked into the SamplingGraph at "
+                "canonicalization (ir.from_bayesnet/canonicalize); it cannot "
+                "be re-applied to an existing IR"
+            )
+        graph = model
+    else:
+        graph = ir_mod.canonicalize(model, evidence)
     if passes is not None or not cache:
-        return _compile_uncached(graph, mesh_shape, passes)
+        prog = _compile_uncached(graph, mesh_shape, passes)
+        if cross_check:
+            prog.schedule_executable()
+        return prog
     key = (graph.ir_key, mesh_shape)
     prog = _CACHE.get(key)
     if prog is not None:
@@ -183,6 +241,8 @@ def compile_graph(
         return prog
     _STATS["misses"] += 1
     prog = _compile_uncached(graph, mesh_shape)
+    if cross_check:
+        prog.schedule_executable()
     _CACHE[key] = prog
     if len(_CACHE) > _CACHE_CAPACITY:
         _CACHE.popitem(last=False)

@@ -13,8 +13,9 @@ paper's two data-movement mechanisms and their TPU analogues:
     per-color `lax.psum` of the (disjoint) state-vector delta.
 
 The cycle/byte cost model is deliberately simple — a line-graph model in the
-spirit of Fig. 9, not a simulator: per round, compute is the balanced
-per-core share of updates, and communication pays a per-hop latency plus a
+spirit of Fig. 9, not a simulator: per round, compute is the update count of
+the round's most-loaded core under the actual placement (the round barriers
+on the slowest core), and communication pays a per-hop latency plus a
 serialization term.  Its purpose is *relative* comparison (greedy vs random
 placement, schedule A vs B), which is exactly what bench_compile reports.
 """
@@ -59,8 +60,15 @@ class Round:
     color: int
     nodes: tuple[int, ...]
     comm: tuple[CommOp, ...]
+    # nodes-per-core under the *actual* placement (index = core id).  The
+    # round barriers on its most-loaded core, so this — not the balanced
+    # share ceil(n/n_cores) — is what compute costs.  Empty tuple = no
+    # placement known (legacy), fall back to the balanced share.
+    core_load: tuple[int, ...] = ()
 
     def compute_cycles(self, n_cores: int) -> int:
+        if self.core_load:
+            return UPDATE_CYCLES * max(self.core_load)
         return UPDATE_CYCLES * -(-len(self.nodes) // n_cores)
 
     def comm_cycles(self) -> int:
@@ -113,6 +121,7 @@ def build_schedule(
     """
     mechanism = "ppermute_halo" if ir.kind == "mrf" else "psum_broadcast"
     cols = placement.mesh_shape[1]
+    n_cores = placement.mesh_shape[0] * placement.mesh_shape[1]
     if adj is None:
         adj = ir.adjacency()
     evid = {node for node, _ in ir.evidence}
@@ -143,7 +152,13 @@ def build_schedule(
             )
             for (src, dst), nb in sorted(traffic.items())
         )
-        rounds.append(Round(color=c, nodes=nodes, comm=comm))
+        core_load = np.bincount(
+            placement.placement[list(nodes)], minlength=n_cores
+        )
+        rounds.append(Round(
+            color=c, nodes=nodes, comm=comm,
+            core_load=tuple(int(x) for x in core_load),
+        ))
     return Schedule(rounds=tuple(rounds), mesh_shape=placement.mesh_shape)
 
 

@@ -68,6 +68,62 @@ class CompiledBayesNet:
     name: str = "bn"
 
 
+def cpt_bases(bn: DiscreteBayesNet) -> np.ndarray:
+    """Offset of each node's CPT in the flat log-CPT arena (entry 0 is the
+    dummy used by padded factor slots)."""
+    bases = np.zeros(bn.n_nodes, np.int64)
+    off = 1
+    for i, cpt in enumerate(bn.cpts):
+        bases[i] = off
+        off += cpt.size
+    return bases
+
+
+def build_color_group(
+    bn: DiscreteBayesNet, free: list[int], bases: np.ndarray | None = None
+) -> ColorGroup:
+    """Dense CPT-gather tensors for one conditionally-independent node set.
+
+    `compile_bayesnet` calls this per color; `repro.compile.backend` calls it
+    per *schedule round*, so passes that regroup rounds (e.g. color merging)
+    change execution without touching this module."""
+    if bases is None:
+        bases = cpt_bases(bn)
+
+    def factor_slots(fnode: int):
+        """(base, stride-per-scope-var, scope vars) for CPT of `fnode`."""
+        scope = list(bn.parents[fnode]) + [fnode]
+        dims = [int(bn.cards[v]) for v in scope]
+        strides = np.ones(len(dims), np.int64)
+        for k in range(len(dims) - 2, -1, -1):
+            strides[k] = strides[k + 1] * dims[k + 1]
+        return bases[fnode], strides, scope
+
+    factor_lists = [[i] + bn.children(i) for i in free]
+    f_max = max(len(fl) for fl in factor_lists)
+    s_max = max(len(bn.parents[f]) + 1 for fl in factor_lists for f in fl)
+    nc = len(free)
+    base = np.zeros((nc, f_max), np.int64)
+    stride = np.zeros((nc, f_max, s_max), np.int64)
+    scope_var = np.zeros((nc, f_max, s_max), np.int64)
+    is_self = np.zeros((nc, f_max, s_max), bool)
+    for a, (i, fl) in enumerate(zip(free, factor_lists)):
+        for b, f in enumerate(fl):
+            fb, fs, sc = factor_slots(f)
+            base[a, b] = fb
+            stride[a, b, : len(sc)] = fs
+            scope_var[a, b, : len(sc)] = sc
+            is_self[a, b, : len(sc)] = [v == i for v in sc]
+    return ColorGroup(
+        nodes=jnp.asarray(free, jnp.int32),
+        cards=jnp.asarray([bn.cards[i] for i in free], jnp.int32),
+        base=jnp.asarray(base, jnp.int32),
+        stride=jnp.asarray(stride, jnp.int32),
+        scope_var=jnp.asarray(scope_var, jnp.int32),
+        is_self=jnp.asarray(is_self),
+    )
+
+
 def compile_bayesnet(
     bn: DiscreteBayesNet,
     evidence: dict[int, int] | None = None,
@@ -88,56 +144,16 @@ def compile_bayesnet(
     assert coloring_mod.verify_coloring(bn.moral_adjacency(), colors)
 
     # flat log-CPT arena; entry 0 is the dummy used by padded factor slots
-    bases = np.zeros(n, np.int64)
-    tables = [np.zeros(1)]
-    off = 1
-    for i, cpt in enumerate(bn.cpts):
-        bases[i] = off
-        tables.append(np.log(cpt.reshape(-1)))
-        off += cpt.size
+    bases = cpt_bases(bn)
+    tables = [np.zeros(1)] + [np.log(cpt.reshape(-1)) for cpt in bn.cpts]
     log_flat = jnp.asarray(np.concatenate(tables), jnp.float32)
-
-    def factor_slots(fnode: int):
-        """(base, stride-per-scope-var, scope vars) for CPT of `fnode`."""
-        scope = list(bn.parents[fnode]) + [fnode]
-        dims = [int(bn.cards[v]) for v in scope]
-        strides = np.ones(len(dims), np.int64)
-        for k in range(len(dims) - 2, -1, -1):
-            strides[k] = strides[k + 1] * dims[k + 1]
-        return bases[fnode], strides, scope
 
     groups: list[ColorGroup] = []
     for group_nodes in coloring_mod.color_groups(colors):
         free = [v for v in group_nodes if v not in evidence]
         if not free:
             continue
-        factor_lists = [[i] + bn.children(i) for i in free]
-        f_max = max(len(fl) for fl in factor_lists)
-        s_max = max(
-            len(bn.parents[f]) + 1 for fl in factor_lists for f in fl
-        )
-        nc = len(free)
-        base = np.zeros((nc, f_max), np.int64)
-        stride = np.zeros((nc, f_max, s_max), np.int64)
-        scope_var = np.zeros((nc, f_max, s_max), np.int64)
-        is_self = np.zeros((nc, f_max, s_max), bool)
-        for a, (i, fl) in enumerate(zip(free, factor_lists)):
-            for b, f in enumerate(fl):
-                fb, fs, sc = factor_slots(f)
-                base[a, b] = fb
-                stride[a, b, : len(sc)] = fs
-                scope_var[a, b, : len(sc)] = sc
-                is_self[a, b, : len(sc)] = [v == i for v in sc]
-        groups.append(
-            ColorGroup(
-                nodes=jnp.asarray(free, jnp.int32),
-                cards=jnp.asarray([bn.cards[i] for i in free], jnp.int32),
-                base=jnp.asarray(base, jnp.int32),
-                stride=jnp.asarray(stride, jnp.int32),
-                scope_var=jnp.asarray(scope_var, jnp.int32),
-                is_self=jnp.asarray(is_self),
-            )
-        )
+        groups.append(build_color_group(bn, free, bases))
 
     rng = np.random.default_rng(seed)
     init = rng.integers(0, np.asarray(bn.cards), size=n)
@@ -207,13 +223,70 @@ def update_color_group(
 
 
 def gibbs_sweep(
-    cbn: CompiledBayesNet, vals: jax.Array, key: jax.Array, sampler: str
+    cbn: CompiledBayesNet,
+    vals: jax.Array,
+    key: jax.Array,
+    sampler: str,
+    groups: list[ColorGroup] | None = None,
 ) -> jax.Array:
-    """One iteration of Alg. 2: loop over colors, parallel within a color."""
-    keys = jax.random.split(key, len(cbn.groups))
-    for g, k in zip(cbn.groups, keys):
+    """One iteration of Alg. 2: loop over rounds, parallel within a round.
+    `groups` defaults to the eager color groups; the schedule backend passes
+    its round-ordered groups (same key-split structure either way)."""
+    groups = cbn.groups if groups is None else groups
+    keys = jax.random.split(key, len(groups))
+    for g, k in zip(groups, keys):
         vals = update_color_group(cbn, g, vals, k, sampler)
     return vals
+
+
+def init_chain_values(
+    cbn: CompiledBayesNet, key: jax.Array, n_chains: int
+) -> tuple[jax.Array, jax.Array]:
+    """Per-chain random initialization of the free RVs (evidence stays
+    clamped).  Draws are uniform in [0, card_i) via `jax.random.randint`
+    with the per-node maxval broadcast — NOT `randint(...) % card`, whose
+    modulo fold is biased for cards that do not divide the draw range.
+    Returns (vals (B, n), advanced key)."""
+    k0, key = jax.random.split(key)
+    rnd = jax.random.randint(
+        k0, (n_chains, cbn.n_nodes), 0,
+        jnp.maximum(cbn.cards[None], 1), jnp.int32,
+    )
+    vals = jnp.where(cbn.free_mask[None], rnd, cbn.init_vals[None])
+    return vals, key
+
+
+def gibbs_run_loop(
+    cbn: CompiledBayesNet,
+    groups: list[ColorGroup],
+    vals: jax.Array,
+    key: jax.Array,
+    n_iters: int,
+    burn_in: int,
+    sampler: str,
+):
+    """The iteration loop shared by the eager engine (`groups=cbn.groups`)
+    and the schedule-direct backend (`groups` built from `Schedule.rounds`):
+    identical tensors + identical key-split structure => identical bits."""
+    hist0 = jnp.zeros((cbn.n_nodes, cbn.max_card), jnp.int32)
+
+    def body(t, carry):
+        vals, key, hist = carry
+        key, sub = jax.random.split(key)
+        vals = gibbs_sweep(cbn, vals, sub, sampler, groups)
+        onehot = (
+            vals[..., None] == jnp.arange(cbn.max_card, dtype=jnp.int32)
+        ).astype(jnp.int32)
+        hist = hist + jnp.where(t >= burn_in, onehot.sum(0), 0)
+        return vals, key, hist
+
+    vals, _, hist = jax.lax.fori_loop(0, n_iters, body, (vals, key, hist0))
+    card_mask = (
+        jnp.arange(cbn.max_card, dtype=jnp.int32)[None] < cbn.cards[:, None]
+    )
+    denom = jnp.maximum(hist.sum(-1, keepdims=True), 1)
+    marginals = jnp.where(card_mask, hist / denom, 0.0)
+    return marginals, vals
 
 
 @functools.partial(
@@ -233,30 +306,5 @@ def run_gibbs(
     the single-marginal histogram accumulates over all chains and kept
     iterations, giving every node's marginal at no extra cost (the paper's
     "compute all single marginals without overhead" observation)."""
-    init = jnp.tile(cbn.init_vals[None], (n_chains, 1))
-    # randomize free nodes per chain
-    k0, key = jax.random.split(key)
-    rnd = jax.random.randint(
-        k0, (n_chains, cbn.n_nodes), 0, 1 << 30, jnp.int32
-    ) % jnp.maximum(cbn.cards[None], 1)
-    vals = jnp.where(cbn.free_mask[None], rnd, init)
-
-    hist0 = jnp.zeros((cbn.n_nodes, cbn.max_card), jnp.int32)
-
-    def body(t, carry):
-        vals, key, hist = carry
-        key, sub = jax.random.split(key)
-        vals = gibbs_sweep(cbn, vals, sub, sampler)
-        onehot = (
-            vals[..., None] == jnp.arange(cbn.max_card, dtype=jnp.int32)
-        ).astype(jnp.int32)
-        hist = hist + jnp.where(t >= burn_in, onehot.sum(0), 0)
-        return vals, key, hist
-
-    vals, _, hist = jax.lax.fori_loop(0, n_iters, body, (vals, key, hist0))
-    card_mask = (
-        jnp.arange(cbn.max_card, dtype=jnp.int32)[None] < cbn.cards[:, None]
-    )
-    denom = jnp.maximum(hist.sum(-1, keepdims=True), 1)
-    marginals = jnp.where(card_mask, hist / denom, 0.0)
-    return marginals, vals
+    vals, key = init_chain_values(cbn, key, n_chains)
+    return gibbs_run_loop(cbn, cbn.groups, vals, key, n_iters, burn_in, sampler)

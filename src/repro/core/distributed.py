@@ -102,9 +102,13 @@ def mrf_gibbs_sharded(
     sampler: str = "lut_ky",
     chain_axes: tuple[str, ...] = ("data",),
     grid_axis: str = "model",
+    parities: tuple[int, ...] = (0, 1),
 ):
     """Chromatic Gibbs with the grid row-sharded over `grid_axis` and chains
-    sharded over `chain_axes`.  Returns final labels (B, H, W)."""
+    sharded over `chain_axes`.  Returns final labels (B, H, W).  `parities`
+    is the per-round checkerboard order — (0, 1) eagerly, or the compiled
+    `Schedule`'s round order under the schedule backend; each round's halo
+    read is the `ppermute_halo` comm op lowered to `lax.ppermute`."""
     exp_table, exp_spec = build_exp_weight_lut()
     n_grid = int(np.prod([mesh.shape[a] for a in (grid_axis,)]))
     assert mrf.height % n_grid == 0, "grid rows must divide over devices"
@@ -130,16 +134,13 @@ def mrf_gibbs_sharded(
 
         def it(t, carry):
             lab, key = carry
-            key, ka, kb = jax.random.split(key, 3)
-            lab = _local_half_step(
-                mrf, lab, ev_loc, ka, 0, sampler, exp_table, exp_spec,
-                grid_axis,
-            )
-            lab = _local_half_step(
-                mrf, lab, ev_loc, kb, 1, sampler, exp_table, exp_spec,
-                grid_axis,
-            )
-            return lab, key
+            ks = jax.random.split(key, 1 + len(parities))
+            for i, parity in enumerate(parities):
+                lab = _local_half_step(
+                    mrf, lab, ev_loc, ks[1 + i], parity, sampler, exp_table,
+                    exp_spec, grid_axis,
+                )
+            return lab, ks[0]
 
         lab, _ = jax.lax.fori_loop(0, n_iters, it, (lab, key))
         return lab
@@ -183,11 +184,14 @@ def shard_bn_groups(
     cbn: bnet.CompiledBayesNet,
     n_dev: int,
     placement: MeshPlacement | None = None,
+    groups: list[bnet.ColorGroup] | None = None,
 ) -> list[ShardedGroup]:
     """Partition each color group across devices.  With a mapping (Sec. IV-B)
-    nodes go to their placed core modulo n_dev; otherwise round-robin."""
+    nodes go to their placed core modulo n_dev; otherwise round-robin.
+    `groups` overrides `cbn.groups` — the schedule-direct backend passes its
+    round-ordered groups here."""
     out = []
-    for g in cbn.groups:
+    for g in groups if groups is not None else cbn.groups:
         nodes = np.asarray(g.nodes)
         if placement is not None:
             owner = placement.placement[nodes] % n_dev
@@ -229,26 +233,25 @@ def bn_gibbs_sharded(
     placement: MeshPlacement | None = None,
     chain_axis: str = "data",
     node_axis: str = "model",
+    groups: list[bnet.ColorGroup] | None = None,
 ):
     """Distributed Alg. 2: nodes of a color split over `node_axis` devices,
-    chains over `chain_axis`.  After each color, the disjoint updates are
-    merged with one small integer psum (the shared-RF exchange).
+    chains over `chain_axis`.  After each color/round, the disjoint updates
+    are merged with one small integer psum — the `psum_broadcast` comm op of
+    the schedule, i.e. the shared-RF exchange.  `groups` overrides the
+    eager color groups with schedule-round groups.
     Returns (marginals (n, V), final local vals)."""
     n_dev = mesh.shape[node_axis]
     n_chain_dev = mesh.shape[chain_axis]
     assert n_chains % n_chain_dev == 0
-    sgroups = shard_bn_groups(cbn, n_dev, placement)
+    sgroups = shard_bn_groups(cbn, n_dev, placement, groups=groups)
     b_loc = n_chains // n_chain_dev
 
     def body(key):
         ci = jax.lax.axis_index(chain_axis)
         di = jax.lax.axis_index(node_axis)
         kc = jax.random.fold_in(key, ci)
-        k0, kc = jax.random.split(kc)
-        rnd = jax.random.randint(
-            k0, (b_loc, cbn.n_nodes), 0, 1 << 30, jnp.int32
-        ) % jnp.maximum(cbn.cards[None], 1)
-        vals = jnp.where(cbn.free_mask[None], rnd, cbn.init_vals[None])
+        vals, kc = bnet.init_chain_values(cbn, kc, b_loc)
 
         def sweep(vals, kk):
             keys = jax.random.split(kk, len(sgroups))
@@ -308,6 +311,20 @@ def bn_gibbs_sharded(
 # ---------------------------------------------------------------------------
 
 
+def _check_comm_mechanisms(program, expected: str) -> None:
+    """The schedule backend routes each round's comm op onto the collective
+    its mechanism names (`psum_broadcast` -> lax.psum, `ppermute_halo` ->
+    lax.ppermute); a round carrying any other mechanism has no lowering in
+    this engine and must be rejected, not silently psum'd."""
+    for r in program.schedule.rounds:
+        for op in r.comm:
+            if op.mechanism != expected:
+                raise ValueError(
+                    f"round {r.color} comm op uses mechanism "
+                    f"{op.mechanism!r}; this engine lowers {expected!r} only"
+                )
+
+
 def run_program_sharded(
     program,
     key: jax.Array,
@@ -318,6 +335,7 @@ def run_program_sharded(
     burn_in: int | None = None,
     sampler: str = "lut_ky",
     evidence: jax.Array | None = None,
+    backend: str = "eager",
     **axes,
 ):
     """Execute a `repro.compile.CompiledProgram` across a device mesh.
@@ -325,17 +343,30 @@ def run_program_sharded(
     BNs run the psum-broadcast engine with node ownership taken from the
     program's Sec. IV-B placement; MRFs run the ppermute-halo engine (the
     row partition *is* the placement for a grid).  Same key, same program
-    => same states as calling these engines directly."""
+    => same states as calling these engines directly.
+
+    With `backend="schedule"` the rounds and their order come from the
+    compiled `Schedule` (via the program's lowered executable), and each
+    round's comm ops are routed onto the collectives their mechanisms name:
+    `psum_broadcast` -> the per-round `lax.psum` of the disjoint state
+    delta, `ppermute_halo` -> the `lax.ppermute` boundary-row exchange."""
+    if backend not in ("eager", "schedule"):
+        raise ValueError(f"unknown backend {backend!r}")
     if program.kind == "bn":
         if evidence is not None:
             raise ValueError(
                 "BN evidence is baked into the program at compile time"
             )
+        groups = None
+        if backend == "schedule":
+            _check_comm_mechanisms(program, "psum_broadcast")
+            groups = program.schedule_executable().round_groups
         return bn_gibbs_sharded(
             program.cbn, key, mesh,
             n_chains=n_chains, n_iters=n_iters,
             burn_in=50 if burn_in is None else burn_in,
-            sampler=sampler, placement=program.placement, **axes,
+            sampler=sampler, placement=program.placement, groups=groups,
+            **axes,
         )
     if evidence is None:
         raise ValueError("MRF programs take the evidence image at run time")
@@ -343,7 +374,12 @@ def run_program_sharded(
         raise ValueError(
             "MRF programs return final states only; burn_in does not apply"
         )
+    parities = (0, 1)
+    if backend == "schedule":
+        _check_comm_mechanisms(program, "ppermute_halo")
+        parities = program.schedule_executable().parities
     return mrf_gibbs_sharded(
         program.mrf, evidence, key, mesh,
-        n_chains=n_chains, n_iters=n_iters, sampler=sampler, **axes,
+        n_chains=n_chains, n_iters=n_iters, sampler=sampler,
+        parities=parities, **axes,
     )

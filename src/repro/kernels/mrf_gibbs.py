@@ -26,6 +26,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import compat
+from repro.core import ky as ky_core
 from repro.core.interp import LUTSpec
 from repro.kernels.interp_lut import interp_eval
 from repro.kernels.ky_sampler import LANES, argmax_fallback, ddg_walk, \
@@ -163,3 +164,47 @@ def mrf_half_step_kernel(
         ),
         interpret=interpret,
     )(labels, labels, labels, evidence, words, exp_table)
+
+
+def mrf_round_step(
+    mrf,
+    labels: jax.Array,  # (B, H, W) int32
+    evidence: jax.Array,  # (H, W) int32
+    key: jax.Array,
+    parity: int,
+    exp_table: jax.Array,
+    exp_spec: LUTSpec,
+    *,
+    precision: int = 16,
+    max_retries: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """One schedule round (single checkerboard parity) through the fused
+    kernel, vmapped over the chains axis — the `repro.compile.backend`
+    entry point for `fused=True` MRF execution.
+
+    Random words come from `ky_core.random_words(key, (B, H, W), n_words)`,
+    the same stream `draw_from_logits` consumes for the (B, H, W, V) logits
+    of the eager half-step, so lut_ky outputs are bit-identical to
+    `mrf.half_step` under the same key."""
+    b, height, width = labels.shape
+    # match draw_from_logits' precision widening for the weight sum bound
+    precision = max(precision, 8 + (mrf.n_labels - 1).bit_length() + 1)
+    n_words = -(-precision * max_retries // 32)
+    words = ky_core.random_words(key, (b, height, width), n_words)
+    tab = jnp.reshape(exp_table, (1, -1)).astype(jnp.float32)
+    # largest divisor of H that fits the default tile (the kernel requires
+    # H % block_h == 0)
+    block_h = next(
+        bh for bh in range(min(DEFAULT_BLOCK_H, height), 0, -1)
+        if height % bh == 0
+    )
+    step = functools.partial(
+        mrf_half_step_kernel,
+        parity=parity, theta=mrf.theta, h=mrf.h, n_labels=mrf.n_labels,
+        spec=exp_spec, data_cost=mrf.data_cost, precision=precision,
+        max_retries=max_retries, block_h=block_h, interpret=interpret,
+    )
+    return jax.vmap(
+        lambda lab, wds: step(lab, evidence, wds.reshape(height, -1), tab)
+    )(labels, words)

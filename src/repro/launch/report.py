@@ -95,21 +95,27 @@ def load_compile(results_dir: str) -> list[dict]:
 
 def compile_table(recs: list[dict]) -> str:
     """Per-workload view of the `repro.compile` chain: compile cost, cache
-    behavior, and the schedule the passes chose vs a random placement."""
+    behavior, the schedule the passes chose vs a random placement, and the
+    eager-vs-schedule backend wall-clock per sweep."""
     rows = [
         "| workload | kind | nodes | colors | compile cold | cache hit | "
-        "hit rate | sweep cycles | vs random | hop-bytes | vs random |",
-        "|---|---|---|---|---|---|---|---|---|---|---|",
+        "hit rate | sweep cycles | vs random | hop-bytes | vs random | "
+        "eager sweep | schedule sweep |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|---|",
     ]
     for r in sorted(recs, key=lambda r: (r["kind"], r["n_nodes"])):
         cyc_win = r["random_sweep_cycles"] / max(r["sweep_cycles"], 1)
         hop_win = r["random_hop_bytes"] / max(r["comm_hop_bytes"], 1)
+        eager = r.get("eager_sweep_s")
+        sched = r.get("schedule_sweep_s")
         rows.append(
             f"| {r['workload']} | {r['kind']} | {r['n_nodes']} "
             f"| {r['n_colors']} | {r['compile_cold_ms']:.1f}ms "
             f"| {r['compile_warm_us']:.0f}us | {r['cache_hit_rate']:.2f} "
             f"| {r['sweep_cycles']} | {cyc_win:.2f}x "
-            f"| {r['comm_hop_bytes']} | {hop_win:.2f}x |"
+            f"| {r['comm_hop_bytes']} | {hop_win:.2f}x "
+            f"| {_fmt_s(eager) if eager is not None else '—'} "
+            f"| {_fmt_s(sched) if sched is not None else '—'} |"
         )
     return "\n".join(rows)
 

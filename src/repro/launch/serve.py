@@ -22,7 +22,20 @@ from repro.models import transformer as tfm
 def generate(cfg, params, prompts, gen_len, sampler="ky", mesh=None,
              features=None, key=None):
     """prompts (B, S0) int32 -> (B, S0+gen_len) tokens (greedy prompt echo +
-    sampled continuation).  Returns (tokens, per-step seconds)."""
+    sampled continuation).  Returns (tokens, per-step seconds).
+
+    With a `mesh`, prefill and decode run through the sharded step factories
+    (params/caches partitioned per launch/sharding.py, executed inside the
+    mesh context); without one, both steps are plain single-device jits."""
+    if mesh is not None:
+        with mesh:
+            return _generate(cfg, params, prompts, gen_len, sampler, mesh,
+                             features, key)
+    return _generate(cfg, params, prompts, gen_len, sampler, None,
+                     features, key)
+
+
+def _generate(cfg, params, prompts, gen_len, sampler, mesh, features, key):
     key = key if key is not None else jax.random.key(0)
     b, s0 = prompts.shape
     batch = {"tokens": prompts}
@@ -30,11 +43,15 @@ def generate(cfg, params, prompts, gen_len, sampler="ky", mesh=None,
         batch["features"] = features
     total0 = s0 + (cfg.frontend_len if cfg.frontend else 0)
 
-    prefill_fn = steps_lib.make_prefill_step(cfg, None)
+    prefill_fn = steps_lib.make_prefill_step(cfg, mesh)
+    if mesh is not None:
+        prefill_fn = prefill_fn(batch)  # sharded factory: bind batch specs
     logits, caches = prefill_fn(params, batch)
     caches = tfm.grow_attn_caches(caches, cfg, gen_len)
 
-    serve_fn = steps_lib.make_serve_step(cfg, None, sampler=sampler)
+    serve_fn = steps_lib.make_serve_step(cfg, mesh, sampler=sampler)
+    if mesh is not None:
+        serve_fn, _ = serve_fn(caches, b)  # bind cache specs + batch
     from repro.models.sampling import sample_tokens
 
     tok = sample_tokens(logits, key, sampler)[:, None] if sampler != "greedy" \
@@ -81,10 +98,13 @@ def main(argv=None):
 
     toks, times = generate(cfg, params, prompts, args.gen,
                            sampler=args.sampler, features=features)
-    tput = args.batch / np.mean(times[1:]) if len(times) > 1 else 0.0
+    # the first timed step includes jit compile; with --gen too short to
+    # leave any steady-state step, report n/a rather than a bogus 0.0
+    tput = f"{args.batch / np.mean(times[1:]):.1f} tok/s" \
+        if len(times) > 1 else "n/a"
     print(f"[serve] arch={cfg.name} sampler={args.sampler} "
           f"generated {toks.shape} tokens; "
-          f"decode throughput {tput:.1f} tok/s (batch {args.batch})")
+          f"decode throughput {tput} (batch {args.batch})")
     print("[serve] sample row:", np.asarray(toks[0])[: args.prompt_len + 8])
     return toks
 

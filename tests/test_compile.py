@@ -1,6 +1,8 @@
 """repro.compile: IR hashing, pass-pipeline determinism, schedule legality,
 program-cache behavior, and compiled-vs-eager bit-exactness."""
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -65,6 +67,33 @@ def test_mrf_evidence_rejected_at_compile_time():
         compile_ir.canonicalize(GridMRF(4, 4, 2), {0: 1})
 
 
+def test_evidence_with_pre_canonicalized_ir_rejected():
+    """Regression: compile_graph(SamplingGraph, evidence) used to drop the
+    evidence silently and compile a different program than requested."""
+    bn = random_bayesnet(8, seed=1)
+    graph = compile_ir.from_bayesnet(bn)  # no evidence baked in
+    with pytest.raises(ValueError):
+        compile_graph(graph, {2: 0})
+    # evidence baked at canonicalization stays the supported path
+    with_ev = compile_graph(compile_ir.from_bayesnet(bn, {2: 0}))
+    assert dict(with_ev.ir.evidence) == {2: 0}
+
+
+def test_ir_key_no_field_boundary_collision():
+    """Regression: field byte-streams used to be hashed back-to-back, so an
+    edge list ending where an evidence list began produced the same digest.
+    Construct that exact re-split and require distinct keys."""
+    bn = random_bayesnet(4, max_parents=0, seed=0)  # edgeless moral graph
+    base = compile_ir.from_bayesnet(bn)
+    as_edge = dataclasses.replace(base, edges=((0, 1),), evidence=())
+    as_evidence = dataclasses.replace(base, edges=(), evidence=((0, 1),))
+    assert as_edge.ir_key != as_evidence.ir_key
+    # and moving bytes across the cards/edges boundary must differ too
+    a = dataclasses.replace(base, cards=(2, 2, 2, 2), edges=((0, 1),))
+    b = dataclasses.replace(base, cards=(2, 2, 2, 2, 0, 1), edges=())
+    assert a.ir_key != b.ir_key
+
+
 # ---------------------------------------------------------------------------
 # Pass pipeline + schedule
 # ---------------------------------------------------------------------------
@@ -119,6 +148,30 @@ def test_schedule_comm_ops_name_paper_mechanisms():
     assert mrf_ops and all(op.mechanism == "ppermute_halo" for op in mrf_ops)
     cost = bn_ctx.schedule.cost()
     assert cost["total_bytes"] > 0 and cost["total_cycles"] > 0
+
+
+def test_compute_cycles_follow_actual_placement():
+    """Regression: Round.compute_cycles used to charge the balanced share
+    ceil(n/n_cores) regardless of placement, so clumping every node of a
+    round onto one core reported the same cost as spreading them."""
+    from repro.compile.schedule import build_schedule
+    from repro.core.mapping import MeshPlacement
+
+    graph = compile_ir.from_mrf(GridMRF(8, 8, 2))
+    ctx = run_pipeline(graph)
+    colors = ctx.colors
+    n = graph.n_nodes
+    clumped = MeshPlacement(np.zeros(n, np.int64), (4, 4))
+    spread = ctx.placement
+    s_clumped = build_schedule(graph, colors, clumped)
+    s_spread = build_schedule(graph, colors, spread)
+    for r_c, r_s in zip(s_clumped.rounds, s_spread.rounds):
+        assert max(r_c.core_load) == len(r_c.nodes)  # all on core 0
+        assert r_c.compute_cycles(16) == len(r_c.nodes)
+        assert r_s.compute_cycles(16) < r_c.compute_cycles(16)
+    assert (
+        s_clumped.cost()["compute_cycles"] > s_spread.cost()["compute_cycles"]
+    )
 
 
 def test_greedy_schedule_beats_random_placement():
@@ -236,6 +289,11 @@ def test_program_run_sharded_8dev():
                                           placement=prog.placement)
         assert (np.asarray(vals_p) == np.asarray(vals_e)).all()
         assert (np.asarray(marg_p) == np.asarray(marg_e)).all()
+        marg_s, vals_s = prog.run_sharded(jax.random.key(1), mesh,
+                                          n_chains=16, n_iters=50, burn_in=10,
+                                          backend="schedule")
+        assert (np.asarray(vals_s) == np.asarray(vals_e)).all()
+        assert (np.asarray(marg_s) == np.asarray(marg_e)).all()
         print("PROGRAM_SHARDED_OK")
         """
     )

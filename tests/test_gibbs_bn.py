@@ -32,6 +32,26 @@ def test_converges_to_exact_marginals(sampler):
     assert _max_tvd(bn, cbn, np.asarray(marg), ev) < 0.03
 
 
+def test_chain_init_uniform_over_cards():
+    """Regression: chain init used to draw randint(0, 1<<30) % card, a
+    modulo-fold whose bias the fix (jax.random.randint with per-node maxval)
+    removes.  Chi-square-ish check on a card-3 node: each value should get
+    ~1/3 of the mass across many chains."""
+    bn = random_bayesnet(5, max_parents=2, cards=3, seed=2)
+    cbn = bnet.compile_bayesnet(bn, evidence={4: 1})
+    n_chains = 30_000
+    vals, _ = bnet.init_chain_values(cbn, jax.random.key(11), n_chains)
+    vals = np.asarray(vals)
+    assert vals.shape == (n_chains, 5)
+    assert (vals[:, 4] == 1).all()  # evidence stays clamped
+    for node in range(4):
+        counts = np.bincount(vals[:, node], minlength=3)
+        expected = n_chains / 3
+        chi2 = float(((counts - expected) ** 2 / expected).sum())
+        # chi-square, 2 dof: P(chi2 > 13.8) ~ 1e-3
+        assert chi2 < 13.8, (node, counts)
+
+
 def test_no_evidence_marginals():
     bn = random_bayesnet(10, max_parents=2, cards=2, seed=7)
     cbn = bnet.compile_bayesnet(bn)
