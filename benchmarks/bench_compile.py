@@ -135,6 +135,9 @@ def run(quick: bool = False, backend: str = "schedule"):
             "compile_cold_ms": cold_s * 1e3,
             "compile_warm_us": warm_s * 1e6,
             "cache_hit_rate": stats["hit_rate"],
+            "cache_evictions": stats["evictions"],
+            "cache_size": stats["size"],
+            "cache_capacity": stats["capacity"],
             "n_colors": prog.diagnostics["n_colors"],
             "n_rounds": cost["n_rounds"],
             "sweep_cycles": cost["total_cycles"],

@@ -1,0 +1,176 @@
+"""Serving-runtime benchmark: batched engine vs one-query-at-a-time.
+
+Replays the synthetic Zipf-over-models trace twice through two serving
+disciplines over the same compiled-program cache:
+
+  * **batched** — `repro.runtime.Engine`: structure-only programs, clamp-set
+    bucketing, vmapped microbatches (the tentpole path).
+  * **serial baseline** — every query individually through
+    `CompiledProgram.run(evidence=...)`, i.e. the best you could do before
+    the runtime existed (still cached, still schedule backend — the delta
+    is batching alone, not caching).
+
+Both are measured over a *second* pass (first pass pays jit compiles for
+both disciplines; serving steady-state is the regime that matters), and the
+acceptance gates are asserted here: program-cache hit rate >= 0.9 on the
+Zipf trace and batched queries/sec above the serial baseline.
+
+Writes one JSON record to ``benchmarks/results/runtime/`` for
+``launch/report.py``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+if __package__ in (None, ""):  # `python benchmarks/bench_runtime.py`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+from benchmarks.common import csv_row
+from repro.compile import cache_stats, clear_program_cache, compile_graph
+from repro.runtime import Engine, EngineConfig, zipf_trace
+
+RESULTS_DIR = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "results", "runtime"
+)
+
+
+def _run_engine(models, queries, backend: str, quick: bool):
+    # the full pad ladder matters here: on a CPU host the samplers are
+    # compute-bound, so padding every microbatch to the max size would bill
+    # the batched discipline for discarded lanes (pass 1 absorbs the extra
+    # jit compiles; pass 2 is the steady state being measured)
+    engine = Engine(models, EngineConfig(
+        backend=backend,
+        pad_sizes=(1, 2, 4, 8),
+    ))
+    engine.submit(list(queries))
+    t0 = time.perf_counter()
+    results = engine.run()
+    wall = time.perf_counter() - t0
+    assert len(results) == len(queries)
+    return engine, wall
+
+
+def _run_serial(models, queries, backend: str):
+    """One program.run() dispatch per query — the pre-runtime discipline."""
+    from repro.compile import ir as compile_ir
+
+    graphs = {
+        name: compile_ir.canonicalize(m, evidence_mode="runtime")
+        for name, m in models.items()
+    }
+    t0 = time.perf_counter()
+    outs = []
+    for q in queries:
+        prog = compile_graph(graphs[q.model], pipeline="runtime")
+        key = jax.random.key(q.seed)
+        if prog.kind == "bn":
+            out = prog.run(
+                key, n_chains=q.n_chains, n_iters=q.n_iters,
+                burn_in=q.burn_in, thin=q.thin, sampler=q.sampler,
+                evidence=q.evidence, backend=backend,
+            )
+        else:
+            out = prog.run(
+                key, n_chains=q.n_chains, n_iters=q.n_iters,
+                sampler=q.sampler, evidence=jnp.asarray(q.image),
+                pins=q.evidence, backend=backend,
+            )
+        outs.append(out)
+    jax.block_until_ready(outs[-1])
+    return time.perf_counter() - t0
+
+
+def run(quick: bool = False, backend: str = "schedule"):
+    rows = []
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    n_queries = 60 if quick else 150
+    models, queries = zipf_trace(n_queries, quick=quick, seed=0)
+
+    # pass 1: cold — pays every program compile and jit trace in both
+    # disciplines and yields the meaningful Zipf hit rate (misses ==
+    # distinct models).  Steady state is then measured as best-of-N with
+    # the disciplines interleaved: wall timings on a shared host are noisy
+    # enough to flip a single-pass comparison either way, and the minimum
+    # is the standard noise-robust estimator for "what the code costs".
+    clear_program_cache()
+    cold_engine, _ = _run_engine(models, queries, backend, quick)
+    serial_cold_s = _run_serial(models, queries, backend)
+    batched_wall, serial_wall = float("inf"), float("inf")
+    engine = None
+    for _ in range(3):
+        eng, w = _run_engine(models, queries, backend, quick)
+        if w < batched_wall:
+            batched_wall, engine = w, eng
+        serial_wall = min(serial_wall, _run_serial(models, queries, backend))
+
+    s = engine.metrics.summary()
+    cold_hit_rate = cold_engine.metrics.summary()["cache_hit_rate"]
+    batched_qps = len(queries) / batched_wall
+    serial_qps = len(queries) / serial_wall
+    stats = cache_stats()
+
+    rec = {
+        "trace": "zipf",
+        "backend": backend,
+        "n_models": len(models),
+        "n_queries": len(queries),
+        "n_batches": s["n_batches"],
+        "mean_batch": s["mean_batch"],
+        "pad_efficiency": s["pad_efficiency"],
+        "sim_latency_p50_ms": s["latency_p50_ms"],
+        "sim_latency_p95_ms": s["latency_p95_ms"],
+        "sim_throughput_qps": s["throughput_qps"],
+        "batched_wall_s": batched_wall,
+        "batched_qps": batched_qps,
+        "serial_wall_s": serial_wall,
+        "serial_qps": serial_qps,
+        "speedup": batched_qps / serial_qps,
+        "serial_cold_s": serial_cold_s,
+        "cache_hit_rate": cold_hit_rate,
+        "warm_hit_rate": s["cache_hit_rate"],
+        "cache_evictions": stats["evictions"],
+        "cache_size": stats["size"],
+        "cache_capacity": stats["capacity"],
+        "recompiles": s["recompiles"],
+    }
+    with open(os.path.join(RESULTS_DIR, "zipf.json"), "w") as f:
+        json.dump(rec, f, indent=1)
+
+    # acceptance gates: the Zipf trace must be a caching+batching win
+    assert cold_hit_rate >= 0.9, (
+        "program-cache hit rate below 0.9 on the Zipf trace", cold_hit_rate,
+    )
+    assert batched_qps > serial_qps, (
+        "batched serving no faster than one-query-at-a-time",
+        batched_qps, serial_qps,
+    )
+    rows.append(csv_row(
+        "runtime_zipf", batched_wall * 1e6 / len(queries),
+        f"backend={backend};queries={len(queries)};"
+        f"batched_qps={batched_qps:.1f};serial_qps={serial_qps:.1f};"
+        f"speedup={batched_qps / serial_qps:.2f};"
+        f"hit_rate={cold_hit_rate:.3f};"
+        f"mean_batch={s['mean_batch']:.2f};"
+        f"p95_sim_ms={s['latency_p95_ms']:.2f};"
+        f"recompiles={s['recompiles']}",
+    ))
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--backend", default="schedule",
+                    choices=["schedule", "eager"])
+    args = ap.parse_args()
+    run(quick=args.quick, backend=args.backend)

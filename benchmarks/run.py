@@ -18,7 +18,8 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from benchmarks import (bench_bayesnet, bench_breakdown, bench_coloring,
                         bench_compile, bench_entropy, bench_interp,
-                        bench_mrf, bench_sampler, bench_token_sampler)
+                        bench_mrf, bench_runtime, bench_sampler,
+                        bench_token_sampler)
 
 SUITES = {
     "sampler": bench_sampler.run,          # Table II
@@ -30,6 +31,7 @@ SUITES = {
     "breakdown": bench_breakdown.run,      # Fig. 2a
     "token_sampler": bench_token_sampler.run,  # beyond-paper (Table V ana.)
     "compile": bench_compile.run,          # compile chain (Sec. IV / Fig. 8)
+    "runtime": bench_runtime.run,          # batched serving vs serial
 }
 
 # CI sanity set: fast, CPU-friendly, exercises the compile chain end to end

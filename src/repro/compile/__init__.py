@@ -21,21 +21,27 @@ from repro.compile.backend import (
     MRFScheduleExec,
     ScheduleLoweringError,
     cross_check,
+    cross_check_clamped,
     lower_schedule,
+    pin_arrays,
     run_bn_schedule,
     run_mrf_schedule,
 )
-from repro.compile.ir import SamplingGraph
+from repro.compile.ir import SamplingGraph, canonicalize
 from repro.compile.passes import (
+    MergeSmallColorsPass,
     PassContext,
     default_pipeline,
+    named_pipeline,
     run_pipeline,
+    runtime_pipeline,
 )
 from repro.compile.program import (
     CompiledProgram,
     cache_stats,
     clear_program_cache,
     compile_graph,
+    set_cache_capacity,
 )
 from repro.compile.schedule import (
     CommOp,
@@ -51,17 +57,24 @@ __all__ = [
     "MRFScheduleExec",
     "ScheduleLoweringError",
     "cross_check",
+    "cross_check_clamped",
     "lower_schedule",
+    "pin_arrays",
     "run_bn_schedule",
     "run_mrf_schedule",
     "SamplingGraph",
+    "canonicalize",
+    "MergeSmallColorsPass",
     "PassContext",
     "default_pipeline",
+    "named_pipeline",
     "run_pipeline",
+    "runtime_pipeline",
     "CompiledProgram",
     "compile_graph",
     "cache_stats",
     "clear_program_cache",
+    "set_cache_capacity",
     "CommOp",
     "Round",
     "Schedule",

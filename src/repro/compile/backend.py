@@ -65,6 +65,9 @@ class BNScheduleExec:
 
     cbn: bnet.CompiledBayesNet
     round_groups: list[bnet.ColorGroup]  # one per Round, schedule-ordered
+    # runtime-evidence node set the groups were specialized for (static:
+    # it determines the gather-tensor shapes); () = unclamped lowering
+    clamp_nodes: tuple[int, ...] = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,29 +76,52 @@ class MRFScheduleExec:
 
     mrf: GridMRF
     parities: tuple[int, ...]  # per-round parity, schedule-ordered
+    pinned: tuple[tuple[int, int], ...] = ()  # baked (site, label) pins
 
 
-def lower_schedule(program) -> BNScheduleExec | MRFScheduleExec:
+def lower_schedule(
+    program, clamp_nodes: tuple[int, ...] = ()
+) -> BNScheduleExec | MRFScheduleExec:
     """Lower a `CompiledProgram`'s schedule into an executable form.
 
     Legality is re-verified first: round-ordered execution is only correct if
     the rounds still partition the free RVs with no intra-round conflicts
-    (a buggy future pass must fail here, not corrupt samples)."""
+    (a buggy future pass must fail here, not corrupt samples).
+
+    `clamp_nodes` specializes a BN lowering for a runtime-evidence node set
+    (`evidence_mode="runtime"` IRs): clamped nodes drop out of every round's
+    gather tensors exactly as baked evidence drops out at compile time,
+    which is what keeps the two paths bit-identical.  MRF pins need no
+    specialization (the pin mask is a plain runtime array), so `clamp_nodes`
+    must be empty for MRF programs; *baked* MRF pins ride in from the IR."""
     ir = program.ir
     schedule: Schedule = program.schedule
     verify_schedule(ir, schedule)
     if ir.kind == "bn":
         bn = ir.source
+        clamp = set(clamp_nodes)
         bases = bnet.cpt_bases(bn)
-        groups = [
-            bnet.build_color_group(bn, list(r.nodes), bases)
-            for r in schedule.rounds
-        ]
-        return BNScheduleExec(cbn=program.cbn, round_groups=groups)
+        groups = bnet.build_clamped_groups(
+            bn, [r.nodes for r in schedule.rounds], clamp, bases
+        )
+        if not groups:
+            raise ScheduleLoweringError(
+                "runtime evidence clamps every free RV; nothing to sample"
+            )
+        return BNScheduleExec(
+            cbn=program.cbn, round_groups=groups, clamp_nodes=tuple(
+                sorted(clamp))
+        )
+    if clamp_nodes:
+        raise ScheduleLoweringError(
+            "MRF pins are runtime arrays (run(pins=...)), not a lowering "
+            "specialization"
+        )
     mrf = ir.source
+    pinned_sites = {node for node, _ in ir.evidence}
     class_size = {
         p: sum(
-            (r + c) % 2 == p
+            (r + c) % 2 == p and (r * mrf.width + c) not in pinned_sites
             for r in range(mrf.height) for c in range(mrf.width)
         )
         for p in (0, 1)
@@ -110,16 +136,40 @@ def lower_schedule(program) -> BNScheduleExec | MRFScheduleExec:
             )
         parity = pars.pop()
         if len(r.nodes) != class_size[parity]:
-            # the grid path executes whole parity classes; a round holding
-            # only part of one (e.g. from a round-splitting pass) has no
-            # lowering here and must fail loudly, not run the wrong plan
+            # the grid path executes whole parity classes (minus baked
+            # pins); a round holding only part of one (e.g. from a round-
+            # splitting pass) has no lowering here and must fail loudly,
+            # not run the wrong plan
             raise ScheduleLoweringError(
                 f"MRF round {r.color} covers {len(r.nodes)} of the "
-                f"{class_size[parity]} parity-{parity} sites; partial-parity "
-                "rounds are not loweable by the grid backend"
+                f"{class_size[parity]} free parity-{parity} sites; partial-"
+                "parity rounds are not loweable by the grid backend"
             )
         parities.append(parity)
-    return MRFScheduleExec(mrf=mrf, parities=tuple(parities))
+    return MRFScheduleExec(
+        mrf=mrf, parities=tuple(parities), pinned=ir.evidence
+    )
+
+
+def pin_arrays(
+    mrf: GridMRF, pinned
+) -> tuple[jax.Array, jax.Array]:
+    """(site, label) pin pairs -> ((H, W) bool mask, (H, W) int32 values).
+    Accepts a dict or an iterable of pairs; values are validated against
+    the label alphabet."""
+    import numpy as np
+
+    mask = np.zeros((mrf.height, mrf.width), bool)
+    vals = np.zeros((mrf.height, mrf.width), np.int64)
+    items = pinned.items() if isinstance(pinned, dict) else pinned
+    for site, lab in items:
+        site, lab = int(site), int(lab)
+        if not (0 <= site < mrf.height * mrf.width and
+                0 <= lab < mrf.n_labels):
+            raise ValueError(f"pinned pixel {site}={lab} out of range")
+        mask[site // mrf.width, site % mrf.width] = True
+        vals[site // mrf.width, site % mrf.width] = lab
+    return jnp.asarray(mask), jnp.asarray(vals, jnp.int32)
 
 
 # ---------------------------------------------------------------------------
@@ -127,15 +177,33 @@ def lower_schedule(program) -> BNScheduleExec | MRFScheduleExec:
 # ---------------------------------------------------------------------------
 
 
+def bn_rounds_core(
+    cbn, round_groups, key, *, n_chains, n_iters, burn_in, sampler, thin=1,
+    clamp_vals=None, clamp_mask=None,
+):
+    """Un-jitted BN round sweep: init (with optional runtime clamps) + the
+    shared `gibbs_run_loop`.  `run_bn_schedule` jits it; the serving batcher
+    vmaps it over per-query (key, clamp_vals) with shared static groups."""
+    vals, key = bnet.init_chain_values(
+        cbn, key, n_chains, clamp_vals=clamp_vals, clamp_mask=clamp_mask
+    )
+    return bnet.gibbs_run_loop(
+        cbn, round_groups, vals, key, n_iters, burn_in, sampler, thin
+    )
+
+
 @functools.partial(
-    jax.jit, static_argnames=("n_chains", "n_iters", "burn_in", "sampler")
+    jax.jit,
+    static_argnames=("n_chains", "n_iters", "burn_in", "sampler", "thin"),
 )
 def _run_bn_rounds(
-    cbn, round_groups, key, *, n_chains, n_iters, burn_in, sampler
+    cbn, round_groups, key, clamp_vals, clamp_mask, *,
+    n_chains, n_iters, burn_in, sampler, thin,
 ):
-    vals, key = bnet.init_chain_values(cbn, key, n_chains)
-    return bnet.gibbs_run_loop(
-        cbn, round_groups, vals, key, n_iters, burn_in, sampler
+    return bn_rounds_core(
+        cbn, round_groups, key, n_chains=n_chains, n_iters=n_iters,
+        burn_in=burn_in, sampler=sampler, thin=thin,
+        clamp_vals=clamp_vals, clamp_mask=clamp_mask,
     )
 
 
@@ -143,16 +211,41 @@ def run_bn_schedule(
     ex: BNScheduleExec,
     key: jax.Array,
     *,
+    clamp_vals: jax.Array | None = None,
+    clamp_mask: jax.Array | None = None,
+    **kwargs,
+):
+    """Execute a lowered BN schedule; same contract as `bayesnet.run_gibbs`
+    (returns (marginals (n, V), final vals)).  For a clamped lowering
+    (`ex.clamp_nodes` non-empty) `clamp_vals`/`clamp_mask` carry the
+    per-query evidence values; the mask must cover exactly the nodes the
+    lowering was specialized for.  Convenience unpacking of
+    `bn_run_clamped` — one body, two spellings."""
+    return bn_run_clamped(
+        ex.cbn, ex.round_groups, clamp_vals, clamp_mask, key, **kwargs
+    )
+
+
+def bn_run_clamped(
+    cbn,
+    round_groups,
+    clamp_vals: jax.Array,
+    clamp_mask: jax.Array,
+    key: jax.Array,
+    *,
     n_chains: int = 32,
     n_iters: int = 200,
     burn_in: int = 50,
     sampler: str = "lut_ky",
+    thin: int = 1,
 ):
-    """Execute a lowered BN schedule; same contract as `bayesnet.run_gibbs`
-    (returns (marginals (n, V), final vals))."""
+    """Execute an already-specialized clamped grouping (from
+    `CompiledProgram.clamped_executable`, either backend's) with per-query
+    evidence values; same contract as `bayesnet.run_gibbs`."""
     return _run_bn_rounds(
-        ex.cbn, ex.round_groups, key,
+        cbn, round_groups, key, clamp_vals, clamp_mask,
         n_chains=n_chains, n_iters=n_iters, burn_in=burn_in, sampler=sampler,
+        thin=thin,
     )
 
 
@@ -161,22 +254,18 @@ def run_bn_schedule(
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=(
-        "mrf", "parities", "n_chains", "n_iters", "sampler", "fused",
-        "interpret",
-    ),
-)
-def _run_mrf_rounds(
+def mrf_rounds_core(
     mrf, parities, evidence, key, *, n_chains, n_iters, sampler, fused,
-    interpret,
+    interpret, pin_mask=None, pin_vals=None,
 ):
+    """Un-jitted schedule-ordered MRF sweep (the batcher vmaps this over
+    per-query evidence images and pin masks — pins are runtime arrays, so
+    one trace serves every pin pattern).  The fused Pallas kernel computes
+    the whole parity update and pinned sites are restored afterwards, which
+    matches the unfused path's masked `where` bit for bit because pinned
+    sites always hold their pinned value going in."""
     exp_table, exp_spec = build_exp_weight_lut()
-    k0, key = jax.random.split(key)
-    labels = jax.random.randint(
-        k0, (n_chains, mrf.height, mrf.width), 0, mrf.n_labels, jnp.int32
-    )
+    labels, key = mrf_mod.init_labels(mrf, key, n_chains, pin_mask, pin_vals)
 
     def body(t, carry):
         labels, key = carry
@@ -187,15 +276,35 @@ def _run_mrf_rounds(
                     mrf, labels, evidence, ks[1 + i], parity,
                     exp_table, exp_spec, interpret=interpret,
                 )
+                if pin_mask is not None:
+                    labels = jnp.where(pin_mask[None], pin_vals[None], labels)
             else:
                 labels = mrf_mod.half_step(
                     mrf, labels, evidence, ks[1 + i], parity, sampler,
-                    exp_table, exp_spec,
+                    exp_table, exp_spec, pin_mask,
                 )
         return labels, ks[0]
 
     labels, _ = jax.lax.fori_loop(0, n_iters, body, (labels, key))
     return labels
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "mrf", "parities", "n_chains", "n_iters", "sampler", "fused",
+        "interpret",
+    ),
+)
+def _run_mrf_rounds(
+    mrf, parities, evidence, key, pin_mask, pin_vals, *,
+    n_chains, n_iters, sampler, fused, interpret,
+):
+    return mrf_rounds_core(
+        mrf, parities, evidence, key, n_chains=n_chains, n_iters=n_iters,
+        sampler=sampler, fused=fused, interpret=interpret,
+        pin_mask=pin_mask, pin_vals=pin_vals,
+    )
 
 
 def run_mrf_schedule(
@@ -207,6 +316,8 @@ def run_mrf_schedule(
     n_iters: int = 200,
     sampler: str = "lut_ky",
     fused: bool = False,
+    pin_mask: jax.Array | None = None,
+    pin_vals: jax.Array | None = None,
 ):
     """Execute a lowered MRF schedule; same contract as `mrf.run_mrf_gibbs`
     (returns final labels (B, H, W)).
@@ -214,15 +325,20 @@ def run_mrf_schedule(
     `fused=True` drives the rounds through the Pallas half-step kernel
     (lut_ky only — the kernel hard-codes the C1+C2 datapath); random words
     are derived exactly as `draw_from_logits` derives them, so the fused
-    path stays bit-identical to the eager engine."""
+    path stays bit-identical to the eager engine.
+
+    Pins come from either the lowering (baked into the IR) or the caller
+    (runtime queries) — `program.run()` guarantees they never both apply."""
     if fused and sampler != "lut_ky":
         raise ValueError(
             f"fused schedule rounds implement the lut_ky datapath only, "
             f"got sampler={sampler!r}"
         )
+    if pin_mask is None and ex.pinned:
+        pin_mask, pin_vals = pin_arrays(ex.mrf, ex.pinned)
     interpret = jax.default_backend() != "tpu"
     return _run_mrf_rounds(
-        ex.mrf, ex.parities, evidence, key,
+        ex.mrf, ex.parities, evidence, key, pin_mask, pin_vals,
         n_chains=n_chains, n_iters=n_iters, sampler=sampler, fused=fused,
         interpret=interpret,
     )
@@ -260,8 +376,12 @@ def cross_check(program, ex=None) -> None:
     else:
         mrf = program.mrf
         ev = jnp.zeros((mrf.height, mrf.width), jnp.int32)
+        pin_mask = pin_vals = None
+        if program.ir.evidence:  # baked pins bind the eager side too
+            pin_mask, pin_vals = pin_arrays(mrf, program.ir.evidence)
         lab_e = mrf_mod.run_mrf_gibbs(
             mrf, ev, key, n_chains=_CHECK_CHAINS, n_iters=_CHECK_ITERS,
+            pin_mask=pin_mask, pin_vals=pin_vals,
         )
         lab_s = run_mrf_schedule(
             ex, ev, key, n_chains=_CHECK_CHAINS, n_iters=_CHECK_ITERS,
@@ -271,4 +391,40 @@ def cross_check(program, ex=None) -> None:
         raise BackendMismatch(
             f"schedule backend diverged from eager on program "
             f"{program.program_key[:12]} ({program.kind})"
+        )
+
+
+def cross_check_clamped(program, ex: BNScheduleExec) -> None:
+    """The clamped-lowering counterpart of `cross_check`: before a runtime-
+    evidence specialization ever serves, both backends run a tiny clamped
+    budget (every clamped node observed at value 0, which every alphabet
+    admits) and must agree bit for bit.  The eager side rebuilds its groups
+    from `cbn.groups` independently of the schedule lowering, so a pass
+    that breaks the rounds/groups correspondence is caught here too."""
+    import numpy as np
+
+    bn = program.ir.source
+    clamp = ex.clamp_nodes
+    clamp_vals = jnp.zeros(bn.n_nodes, jnp.int32)
+    clamp_mask = jnp.zeros(bn.n_nodes, bool).at[jnp.asarray(
+        clamp, jnp.int32)].set(True)
+    key = jax.random.key(_CHECK_KEY)
+    eager_groups = bnet.build_clamped_groups(
+        bn, [np.asarray(g.nodes) for g in program.cbn.groups], clamp
+    )
+    kwargs = dict(
+        n_chains=_CHECK_CHAINS, n_iters=_CHECK_ITERS, burn_in=0,
+        sampler="lut_ky", thin=1,
+    )
+    marg_e, vals_e = _run_bn_rounds(
+        program.cbn, eager_groups, key, clamp_vals, clamp_mask, **kwargs
+    )
+    marg_s, vals_s = run_bn_schedule(
+        ex, key, clamp_vals=clamp_vals, clamp_mask=clamp_mask, **kwargs
+    )
+    if not ((np.asarray(vals_e) == np.asarray(vals_s)).all()
+            and (np.asarray(marg_e) == np.asarray(marg_s)).all()):
+        raise BackendMismatch(
+            f"clamped schedule backend diverged from eager on program "
+            f"{program.program_key[:12]} (clamp={clamp})"
         )

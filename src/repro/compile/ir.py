@@ -14,6 +14,18 @@ program cache — two models that would compile to the same program share a
 key, and any parameter change invalidates it.  Runtime inputs (the MRF
 evidence image, PRNG keys, chain counts) are deliberately *not* part of the
 IR: a serving workload re-runs one cached program with fresh data.
+
+Evidence comes in two modes, recorded as `evidence_mode`:
+
+  * ``"baked"``   — the (node, value) pairs are part of the program: they
+    feed `ir_key`, the schedule drops them from every round, and the CPT
+    gathers read their fixed values.  Two queries that differ only in an
+    observed value hash to *different* programs.
+  * ``"runtime"`` — structure-only canonicalization for the serving path
+    (`repro.runtime`): `ir_key` hashes cards/edges/parameters but no
+    evidence, and per-query observations enter `CompiledProgram.run()` as
+    clamp masks (BN) / pinned pixels (MRF) instead.  Every query on the
+    same model hits the same cached program.
 """
 
 from __future__ import annotations
@@ -46,6 +58,7 @@ class SamplingGraph:
     evidence: tuple[tuple[int, int], ...]  # sorted (node, value) pairs
     source: DiscreteBayesNet | GridMRF
     name: str = "graph"
+    evidence_mode: str = "baked"  # "baked" | "runtime"
 
     def adjacency(self) -> list[set[int]]:
         adj: list[set[int]] = [set() for _ in range(self.n_nodes)]
@@ -65,9 +78,14 @@ class SamplingGraph:
         Every field is hashed as tag + length + bytes (`_hash_field`): a bare
         concatenation of the byte streams would let distinct `(cards, edges,
         evidence)` splits collide — e.g. one edge vs the same two ints read
-        as an evidence pair."""
+        as an evidence pair.
+
+        `evidence_mode` is hashed too: a runtime-evidence program accepts
+        per-query clamps that a baked one rejects, so the two must never
+        share a cache slot even when the structural fields agree."""
         h = hashlib.sha256()
         _hash_field(h, "kind", self.kind.encode())
+        _hash_field(h, "evmode", self.evidence_mode.encode())
         _hash_field(h, "cards", np.asarray(self.cards, np.int64).tobytes())
         _hash_field(h, "edges", np.asarray(self.edges, np.int64).tobytes())
         _hash_field(
@@ -91,12 +109,23 @@ class SamplingGraph:
 
 
 def from_bayesnet(
-    bn: DiscreteBayesNet, evidence: dict[int, int] | None = None
+    bn: DiscreteBayesNet,
+    evidence: dict[int, int] | None = None,
+    evidence_mode: str = "baked",
 ) -> SamplingGraph:
     """Canonicalize a BN: the conflict graph is the moral graph (i ~ j iff
-    j in MB(i)), and evidence is part of the program (baked into the CPT
-    gathers), hence part of the IR."""
+    j in MB(i)).  With `evidence_mode="baked"` (default) evidence is part of
+    the program (baked into the CPT gathers), hence part of the IR; with
+    `"runtime"` the IR is structure-only and observations arrive per query
+    at `CompiledProgram.run(evidence=...)`."""
     bn.validate()
+    if evidence_mode not in ("baked", "runtime"):
+        raise ValueError(f"unknown evidence_mode {evidence_mode!r}")
+    if evidence_mode == "runtime" and evidence:
+        raise ValueError(
+            "structure-only canonicalization takes no evidence; pass the "
+            "observations to CompiledProgram.run(evidence=...) instead"
+        )
     adj = bn.moral_adjacency()
     edges = tuple(
         (i, j) for i in range(bn.n_nodes) for j in sorted(adj[i]) if i < j
@@ -113,39 +142,74 @@ def from_bayesnet(
         evidence=ev,
         source=bn,
         name=bn.name,
+        evidence_mode=evidence_mode,
     )
 
 
-def from_mrf(mrf: GridMRF) -> SamplingGraph:
+def from_mrf(
+    mrf: GridMRF, pinned: dict[int, int] | None = None
+) -> SamplingGraph:
     """Canonicalize a grid MRF: the conflict graph is the 4-connected grid
-    adjacency.  The evidence image is a *runtime* input (same program, new
-    data every request), so the IR carries none."""
+    adjacency.  The evidence *image* is always a runtime input (same
+    program, new data every request).  `pinned` optionally bakes pixels at
+    known labels into the program ({site: label}); without it the IR is
+    runtime-mode and per-query pins go to `CompiledProgram.run(pins=...)`."""
     adj = mrf.adjacency()
     n = mrf.height * mrf.width
     edges = tuple((i, j) for i in range(n) for j in sorted(adj[i]) if i < j)
+    ev = tuple(sorted((int(k), int(v)) for k, v in (pinned or {}).items()))
+    for site, lab in ev:
+        if not (0 <= site < n and 0 <= lab < mrf.n_labels):
+            raise ValueError(f"pinned pixel {site}={lab} out of range")
+    # the checkerboard backend executes whole parity classes; a class that
+    # is pinned away entirely would change the per-iteration key-split
+    # structure and silently diverge from the eager engine
+    for parity in (0, 1):
+        cls = {
+            r * mrf.width + c
+            for r in range(mrf.height)
+            for c in range(mrf.width)
+            if (r + c) % 2 == parity
+        }
+        if cls and cls <= {site for site, _ in ev}:
+            raise ValueError(
+                f"pinned pixels cover the entire parity-{parity} class; "
+                "at least one free site per checkerboard color is required"
+            )
     return SamplingGraph(
         kind="mrf",
         n_nodes=n,
         cards=(mrf.n_labels,) * n,
         edges=edges,
-        evidence=(),
+        evidence=ev,
         source=mrf,
         name=mrf.name,
+        evidence_mode="baked" if ev else "runtime",
     )
 
 
 def canonicalize(
     model: DiscreteBayesNet | GridMRF,
     evidence: dict[int, int] | None = None,
+    evidence_mode: str = "baked",
 ) -> SamplingGraph:
-    """Front-end dispatch: any supported model -> SamplingGraph."""
+    """Front-end dispatch: any supported model -> SamplingGraph.
+
+    `evidence_mode="runtime"` is the serving path's structure-only form:
+    the returned IR hashes cards/edges/parameters but no observations, so
+    every query on the same model shares one `ir_key`.  An MRF's mode is
+    determined by its pins, not this argument (no pins here ⇒ runtime-mode
+    IR; baked pins go through `ir.from_mrf(mrf, pinned=...)`), but the
+    argument is still validated so a typo cannot pass silently."""
+    if evidence_mode not in ("baked", "runtime"):
+        raise ValueError(f"unknown evidence_mode {evidence_mode!r}")
     if isinstance(model, DiscreteBayesNet):
-        return from_bayesnet(model, evidence)
+        return from_bayesnet(model, evidence, evidence_mode)
     if isinstance(model, GridMRF):
         if evidence:
             raise ValueError(
                 "MRF evidence is a runtime input of CompiledProgram.run(), "
-                "not part of the IR"
+                "not part of the IR (baked pins go through ir.from_mrf)"
             )
         return from_mrf(model)
     raise TypeError(f"cannot canonicalize {type(model).__name__}")

@@ -94,6 +94,73 @@ class DsaturPass(Pass):
         )
 
 
+class MergeSmallColorsPass(Pass):
+    """Fuse tiny independent color classes into one round (serving-path
+    optimization: every round is a kernel launch plus a barrier, so a tail
+    of near-singleton colors makes the microbatched runtime pay launch
+    overhead per round per query batch).
+
+    A class with at most `max_size` nodes is folded into the first other
+    class it shares no conflict edge with (smallest candidate first, color
+    id as the tie-break, so the result is deterministic).  Merging two
+    independent classes preserves proper coloring by definition; the pass
+    re-verifies anyway, and `backend.lower_schedule` re-checks legality a
+    second time before the merged rounds ever execute.
+
+    On raw DSATUR output this is provably the identity: greedy coloring
+    gives every node of class d a neighbor in every class below d (else it
+    would have taken the smaller color), so no two classes are ever
+    independent.  Its value is as the *normalizer* in the serving pipeline —
+    any pass or imported coloring that splinters rounds (round splitters,
+    per-component colorings, hand-written schedules) gets its fragments
+    re-fused before the runtime pays per-round launch overhead for them."""
+
+    name = "merge_small_colors"
+
+    def __init__(self, max_size: int = 4):
+        self.max_size = max_size
+
+    def run(self, ctx: PassContext) -> None:
+        ctx.require("adj", "colors")
+        colors = np.asarray(ctx.colors).copy()
+        n_before = int(colors.max()) + 1 if len(colors) else 0
+        members = {
+            c: set(np.where(colors == c)[0].tolist())
+            for c in range(n_before)
+        }
+        # neighbor color sets make the independence test O(classes)
+        adj_colors = {
+            c: {int(colors[u]) for v in nodes for u in ctx.adj[v]}
+            for c, nodes in members.items()
+        }
+        by_size = sorted(members, key=lambda c: (len(members[c]), c))
+        for c in by_size:
+            if len(members[c]) == 0 or len(members[c]) > self.max_size:
+                continue
+            for d in sorted(members, key=lambda d: (len(members[d]), d)):
+                if d == c or not members[d] or c in adj_colors[d]:
+                    continue
+                members[d] |= members[c]
+                adj_colors[d] |= adj_colors[c]
+                for e in members:  # c's conflicts are now d's
+                    if c in adj_colors[e]:
+                        adj_colors[e].add(d)
+                members[c] = set()
+                break
+        relabel = {}
+        for c in range(n_before):
+            for v in sorted(members.get(c, ())):
+                colors[v] = relabel.setdefault(c, len(relabel))
+        assert coloring_mod.verify_coloring(ctx.adj, colors)
+        ctx.colors = colors
+        stats = coloring_mod.color_stats(colors)
+        ctx.diagnostics.update(
+            n_colors=stats["n_colors"],
+            color_balance=stats["balance"],
+            rounds_merged=n_before - stats["n_colors"],
+        )
+
+
 class GreedyMapPass(Pass):
     """Spatial placement (Sec. IV-B): communication-distance-minimizing
     greedy mapping onto the core mesh."""
@@ -160,11 +227,41 @@ def default_pipeline() -> list[Pass]:
     return [MoralizePass(), DsaturPass(), GreedyMapPass(), SchedulePass()]
 
 
+def runtime_pipeline() -> list[Pass]:
+    """The serving-path lowering (`repro.runtime`): the default pipeline
+    plus small-color merging, so no coloring source can splinter rounds
+    and charge the microbatched runtime per-round launch overhead (on
+    DSATUR's own output the merge is an identity — see the pass docstring).
+    Kept out of the default pipeline so standalone `compile_bayesnet`
+    stays bit-comparable with default-compiled programs."""
+    return [
+        MoralizePass(), DsaturPass(), MergeSmallColorsPass(),
+        GreedyMapPass(), SchedulePass(),
+    ]
+
+
 def random_baseline_pipeline(seed: int = 0) -> list[Pass]:
     """The Fig. 9 baseline: the default lowering with the greedy placement
     swapped for a seeded random one.  Kept here so benchmarks/tests compare
     against the real pipeline even as passes are added."""
     return [MoralizePass(), DsaturPass(), RandomMapPass(seed), SchedulePass()]
+
+
+# Named pipelines are the cacheable ones: `compile_graph(pipeline=...)` keys
+# the program cache by this name, so every registered lowering of a model
+# gets its own slot (ad-hoc `passes=[...]` lists still bypass the cache).
+_PIPELINES: dict[str, Callable[[], list[Pass]]] = {
+    "default": default_pipeline,
+    "runtime": runtime_pipeline,
+}
+
+
+def named_pipeline(name: str) -> list[Pass]:
+    if name not in _PIPELINES:
+        raise ValueError(
+            f"unknown pipeline {name!r}; registered: {sorted(_PIPELINES)}"
+        )
+    return _PIPELINES[name]()
 
 
 def run_pipeline(

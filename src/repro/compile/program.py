@@ -13,8 +13,21 @@ color groups in the same order, and the program cross-checks that at
 compile time — so a cached program is a pure win, never a behavior change.
 
 `compile_graph()` is the entry point and fronts an LRU program cache keyed
-by `(ir_key, mesh_shape)`: a serving workload that re-submits the same
-model (fresh evidence image, fresh PRNG key) pays the pass pipeline once.
+by `(ir_key, mesh_shape, pipeline)`: a serving workload that re-submits the
+same model (fresh evidence image, fresh PRNG key) pays the pass pipeline
+once.  The capacity is runtime-configurable (`set_cache_capacity`) and the
+stats (`cache_stats`) report hits/misses/evictions/size for the serving
+dashboards.
+
+Programs compiled from a *runtime-evidence* IR (`evidence_mode="runtime"`,
+see `ir.py`) additionally accept per-query observations at `run()`:
+`evidence={node: value}` clamps BN nodes (the lowering is specialized per
+observed-node *set* and cached on the program; values stay runtime), and
+`pins={site: label}` pins MRF pixels (a plain runtime array — no
+specialization).  Both are bit-exact with baking the same observations at
+compile time, and the first use of every clamped specialization
+cross-checks the schedule backend against the eager engine just like the
+unclamped first lowering does.
 """
 
 from __future__ import annotations
@@ -24,6 +37,7 @@ import dataclasses
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.compile import backend as backend_mod
@@ -47,6 +61,11 @@ class CompiledProgram:
     compile_s: float = 0.0
     # lazily lowered + cross-checked schedule-direct executable
     _schedule_exec: object = dataclasses.field(default=None, repr=False)
+    # runtime-evidence specializations, keyed by (clamp node set, backend);
+    # values are round-ordered ColorGroup lists (BN only)
+    _clamp_execs: dict = dataclasses.field(default_factory=dict, repr=False)
+    # how many clamped lowerings were built (serving metric: "recompiles")
+    clamp_lowerings: int = 0
 
     @property
     def program_key(self) -> str:
@@ -73,6 +92,60 @@ class CompiledProgram:
             self._schedule_exec = ex
         return self._schedule_exec
 
+    def clamped_executable(self, clamp_nodes: tuple[int, ...], backend: str):
+        """Round-ordered gather groups specialized for a runtime-evidence
+        node set (BN only; cached per (set, backend) on the program).
+
+        The node *set* is static — it fixes the gather-tensor shapes — while
+        the observed *values* stay runtime inputs, so every query sharing an
+        observation pattern reuses one specialization.  `backend="schedule"`
+        derives the groups from `Schedule.rounds` and cross-checks the first
+        lowering against an independently derived eager grouping
+        (`cross_check_clamped`), mirroring the unclamped guarantee."""
+        key = (clamp_nodes, backend)
+        groups = self._clamp_execs.get(key)
+        if groups is None:
+            if backend == "schedule":
+                ex = backend_mod.lower_schedule(self, clamp_nodes)
+                backend_mod.cross_check_clamped(self, ex)
+                groups = ex.round_groups
+            else:
+                groups = bnet.build_clamped_groups(
+                    self.ir.source,
+                    [np.asarray(g.nodes) for g in self.cbn.groups],
+                    clamp_nodes,
+                )
+                if not groups:
+                    raise ValueError(
+                        "runtime evidence clamps every free RV; nothing "
+                        "to sample"
+                    )
+            self._clamp_execs[key] = groups
+            self.clamp_lowerings += 1
+        return groups
+
+    def _bn_clamp_arrays(self, evidence: dict):
+        """Validate a runtime-evidence dict -> (nodes, vals (n,), mask (n,))."""
+        if self.ir.evidence_mode != "runtime":
+            raise ValueError(
+                "BN evidence is baked into this program at compile time; "
+                "per-query evidence needs a structure-only IR "
+                "(ir.canonicalize(bn, evidence_mode='runtime'))"
+            )
+        if not isinstance(evidence, dict):
+            raise TypeError("BN runtime evidence is a {node: value} dict")
+        n = self.ir.n_nodes
+        vals = np.zeros(n, np.int64)
+        mask = np.zeros(n, bool)
+        for node, val in evidence.items():
+            node, val = int(node), int(val)
+            if not (0 <= node < n and 0 <= val < self.ir.cards[node]):
+                raise ValueError(f"evidence {node}={val} out of range")
+            vals[node] = val
+            mask[node] = True
+        nodes = tuple(sorted(int(k) for k in evidence))
+        return nodes, jnp.asarray(vals, jnp.int32), jnp.asarray(mask)
+
     def run(
         self,
         key: jax.Array,
@@ -80,17 +153,25 @@ class CompiledProgram:
         n_chains: int = 32,
         n_iters: int = 200,
         burn_in: int | None = None,
+        thin: int = 1,
         sampler: str = "lut_ky",
-        evidence: jax.Array | None = None,
+        evidence=None,
+        pins=None,
         backend: str = "eager",
         fused: bool = False,
     ):
         """Single-device jitted execution.
 
-        BN: returns (marginals (n, V), final vals) — evidence was baked at
-        compile time; `burn_in` defaults to 50.  MRF: `evidence` is the
-        runtime observation image; returns final labels (B, H, W) and has
-        no burn-in concept (passing one raises rather than being dropped).
+        BN: returns (marginals (n, V), final vals); `burn_in` defaults to
+        50 and `thin` keeps every thin-th post-burn-in sweep in the
+        marginals.  On a baked-evidence program observations were fixed at
+        compile time; on a runtime-evidence program (`evidence_mode=
+        "runtime"`), `evidence={node: value}` clamps per query — bit-exact
+        with baking the same dict.  MRF: `evidence` is the runtime
+        observation image; returns final labels (B, H, W) and has no
+        burn-in/thinning concept (passing one raises rather than being
+        dropped).  `pins={site: label}` (or a ((H, W) bool, (H, W) int32)
+        pair) clamps pixels per query on a runtime-mode MRF program.
 
         `backend` picks the execution path: "eager" delegates to the eager
         Gibbs engines; "schedule" executes the compiled `Schedule`'s rounds
@@ -101,22 +182,34 @@ class CompiledProgram:
             raise ValueError(f"unknown backend {backend!r}")
         if fused and backend != "schedule":
             raise ValueError("fused execution requires backend='schedule'")
+        if thin < 1:
+            raise ValueError(f"thin must be >= 1, got {thin}")
         if self.kind == "bn":
-            if evidence is not None:
+            if pins is not None:
                 raise ValueError(
-                    "BN evidence is baked into the program at compile time"
+                    "pins are an MRF concept; BN observations go through "
+                    "evidence={node: value}"
                 )
             if fused:
                 raise ValueError("fused rounds are an MRF-only path")
             burn_in = 50 if burn_in is None else burn_in
+            if evidence is not None:
+                nodes, ev_vals, ev_mask = self._bn_clamp_arrays(evidence)
+                groups = self.clamped_executable(nodes, backend)
+                return backend_mod.bn_run_clamped(
+                    self.cbn, groups, ev_vals, ev_mask, key,
+                    n_chains=n_chains, n_iters=n_iters, burn_in=burn_in,
+                    sampler=sampler, thin=thin,
+                )
             if backend == "schedule":
                 return backend_mod.run_bn_schedule(
                     self.schedule_executable(), key, n_chains=n_chains,
                     n_iters=n_iters, burn_in=burn_in, sampler=sampler,
+                    thin=thin,
                 )
             return bnet.run_gibbs(
                 self.cbn, key, n_chains=n_chains, n_iters=n_iters,
-                burn_in=burn_in, sampler=sampler,
+                burn_in=burn_in, sampler=sampler, thin=thin,
             )
         if evidence is None:
             raise ValueError("MRF programs take the evidence image at run()")
@@ -124,14 +217,35 @@ class CompiledProgram:
             raise ValueError(
                 "MRF programs return final states only; burn_in does not apply"
             )
+        if thin != 1:
+            raise ValueError(
+                "MRF programs return final states only; thin does not apply"
+            )
+        pin_mask = pin_vals = None
+        if pins is not None:
+            if self.ir.evidence_mode != "runtime":
+                raise ValueError(
+                    "this program bakes its pinned pixels at compile time "
+                    "(ir.from_mrf(mrf, pinned=...)); per-query pins need a "
+                    "runtime-mode IR"
+                )
+            if isinstance(pins, dict):
+                pin_mask, pin_vals = backend_mod.pin_arrays(self.mrf, pins)
+            else:
+                pin_mask, pin_vals = pins
+        elif self.ir.evidence:
+            pin_mask, pin_vals = backend_mod.pin_arrays(
+                self.mrf, self.ir.evidence
+            )
         if backend == "schedule":
             return backend_mod.run_mrf_schedule(
                 self.schedule_executable(), evidence, key, n_chains=n_chains,
                 n_iters=n_iters, sampler=sampler, fused=fused,
+                pin_mask=pin_mask, pin_vals=pin_vals,
             )
         return mrf_mod.run_mrf_gibbs(
             self.mrf, evidence, key, n_chains=n_chains, n_iters=n_iters,
-            sampler=sampler,
+            sampler=sampler, pin_mask=pin_mask, pin_vals=pin_vals,
         )
 
     def run_sharded(
@@ -151,6 +265,11 @@ class CompiledProgram:
         this program's placement (see distributed.run_program_sharded).
         With backend="schedule", rounds come from this program's schedule and
         each round's comm op is routed onto its named collective."""
+        if self.kind == "bn" and evidence is not None:
+            raise ValueError(
+                "runtime evidence clamps are a single-device serving path; "
+                "bake the evidence for sharded execution"
+            )
         return dist_mod.run_program_sharded(
             self, key, mesh, n_chains=n_chains, n_iters=n_iters,
             burn_in=burn_in, sampler=sampler, evidence=evidence,
@@ -162,8 +281,11 @@ def _compile_uncached(
     graph: ir_mod.SamplingGraph,
     mesh_shape: tuple[int, int],
     passes=None,
+    pipeline: str = "default",
 ) -> CompiledProgram:
     t0 = time.perf_counter()
+    if passes is None:
+        passes = passes_mod.named_pipeline(pipeline)
     ctx = passes_mod.run_pipeline(graph, mesh_shape, passes)
     cbn = None
     if graph.kind == "bn":
@@ -177,6 +299,7 @@ def _compile_uncached(
             assert tuple(int(v) for v in np.asarray(g.nodes)) == r.nodes
     diagnostics = dict(ctx.diagnostics)
     diagnostics["pass_times_s"] = dict(ctx.pass_times_s)
+    diagnostics["pipeline"] = pipeline
     prog = CompiledProgram(
         ir=graph,
         placement=ctx.placement,
@@ -199,22 +322,39 @@ _CACHE_CAPACITY = 128
 _STATS = {"hits": 0, "misses": 0, "evictions": 0}
 
 
+def set_cache_capacity(capacity: int) -> int:
+    """Set the program-cache capacity (serving knob: how many distinct
+    model structures stay warm).  Shrinking evicts LRU-first immediately.
+    Returns the previous capacity."""
+    global _CACHE_CAPACITY
+    if capacity < 1:
+        raise ValueError(f"cache capacity must be >= 1, got {capacity}")
+    prev, _CACHE_CAPACITY = _CACHE_CAPACITY, capacity
+    while len(_CACHE) > _CACHE_CAPACITY:
+        _CACHE.popitem(last=False)
+        _STATS["evictions"] += 1
+    return prev
+
+
 def compile_graph(
     model: DiscreteBayesNet | GridMRF | ir_mod.SamplingGraph,
     evidence: dict[int, int] | None = None,
     *,
     mesh_shape: tuple[int, int] = (4, 4),
     passes=None,
+    pipeline: str = "default",
     cache: bool = True,
     cross_check: bool = False,
 ) -> CompiledProgram:
     """Front door of the compile chain: model -> IR -> passes -> program.
 
     With `cache=True` (default) programs are memoized by the IR content
-    hash and mesh shape; custom `passes` bypass the cache (they may not be
-    the default lowering).  `cross_check=True` lowers the schedule-direct
-    backend at compile time and bit-checks it against the eager engines
-    (otherwise the check runs at the backend's first use)."""
+    hash, mesh shape, and pipeline name; ad-hoc `passes` bypass the cache
+    (they may not be a registered lowering), while `pipeline=` picks a
+    *named* pass list from `passes.named_pipeline` ("default", "runtime")
+    that caches like any other.  `cross_check=True` lowers the
+    schedule-direct backend at compile time and bit-checks it against the
+    eager engines (otherwise the check runs at the backend's first use)."""
     if isinstance(model, ir_mod.SamplingGraph):
         if evidence:
             # silently dropping it would compile a different program than
@@ -229,18 +369,18 @@ def compile_graph(
     else:
         graph = ir_mod.canonicalize(model, evidence)
     if passes is not None or not cache:
-        prog = _compile_uncached(graph, mesh_shape, passes)
+        prog = _compile_uncached(graph, mesh_shape, passes, pipeline)
         if cross_check:
             prog.schedule_executable()
         return prog
-    key = (graph.ir_key, mesh_shape)
+    key = (graph.ir_key, mesh_shape, pipeline)
     prog = _CACHE.get(key)
     if prog is not None:
         _STATS["hits"] += 1
         _CACHE.move_to_end(key)
         return prog
     _STATS["misses"] += 1
-    prog = _compile_uncached(graph, mesh_shape)
+    prog = _compile_uncached(graph, mesh_shape, pipeline=pipeline)
     if cross_check:
         prog.schedule_executable()
     _CACHE[key] = prog
@@ -255,6 +395,7 @@ def cache_stats() -> dict:
     return {
         **_STATS,
         "size": len(_CACHE),
+        "capacity": _CACHE_CAPACITY,
         "hit_rate": _STATS["hits"] / total if total else 0.0,
     }
 

@@ -124,6 +124,30 @@ def build_color_group(
     )
 
 
+def build_clamped_groups(
+    bn: DiscreteBayesNet,
+    node_lists,
+    clamp_nodes,
+    bases: np.ndarray | None = None,
+) -> list[ColorGroup]:
+    """Rebuild gather groups with a runtime-evidence set removed.
+
+    `node_lists` is the unclamped grouping (eager: `[g.nodes for g in
+    cbn.groups]`; schedule backend: `[r.nodes for r in rounds]`); clamped
+    nodes are dropped from every group and all-clamped groups vanish —
+    exactly what `compile_bayesnet` does when the same evidence is baked,
+    which is what makes the runtime-clamp path bit-exact with it."""
+    if bases is None:
+        bases = cpt_bases(bn)
+    clamp = set(int(v) for v in clamp_nodes)
+    out: list[ColorGroup] = []
+    for nodes in node_lists:
+        free = [int(v) for v in nodes if int(v) not in clamp]
+        if free:
+            out.append(build_color_group(bn, free, bases))
+    return out
+
+
 def compile_bayesnet(
     bn: DiscreteBayesNet,
     evidence: dict[int, int] | None = None,
@@ -240,19 +264,34 @@ def gibbs_sweep(
 
 
 def init_chain_values(
-    cbn: CompiledBayesNet, key: jax.Array, n_chains: int
+    cbn: CompiledBayesNet,
+    key: jax.Array,
+    n_chains: int,
+    clamp_vals: jax.Array | None = None,
+    clamp_mask: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Per-chain random initialization of the free RVs (evidence stays
     clamped).  Draws are uniform in [0, card_i) via `jax.random.randint`
     with the per-node maxval broadcast — NOT `randint(...) % card`, whose
     modulo fold is biased for cards that do not divide the draw range.
-    Returns (vals (B, n), advanced key)."""
+
+    `clamp_vals`/`clamp_mask` ((n,) int32 / (n,) bool) add *runtime*
+    evidence on top of whatever the compile baked in: masked nodes start at
+    their clamped value instead of a random draw.  The random tensor is
+    drawn for every node either way, so a runtime-clamped init is bit-exact
+    with a compile that baked the same evidence.  Returns (vals (B, n),
+    advanced key)."""
     k0, key = jax.random.split(key)
     rnd = jax.random.randint(
         k0, (n_chains, cbn.n_nodes), 0,
         jnp.maximum(cbn.cards[None], 1), jnp.int32,
     )
-    vals = jnp.where(cbn.free_mask[None], rnd, cbn.init_vals[None])
+    fixed = cbn.init_vals
+    free = cbn.free_mask
+    if clamp_mask is not None:
+        fixed = jnp.where(clamp_mask, clamp_vals, fixed)
+        free = free & ~clamp_mask
+    vals = jnp.where(free[None], rnd, fixed[None])
     return vals, key
 
 
@@ -264,10 +303,16 @@ def gibbs_run_loop(
     n_iters: int,
     burn_in: int,
     sampler: str,
+    thin: int = 1,
 ):
     """The iteration loop shared by the eager engine (`groups=cbn.groups`)
     and the schedule-direct backend (`groups` built from `Schedule.rounds`):
-    identical tensors + identical key-split structure => identical bits."""
+    identical tensors + identical key-split structure => identical bits.
+
+    `thin` keeps every thin-th post-burn-in sweep in the marginal histogram
+    (streaming accumulation — no sample matrix is ever materialized); the
+    chain itself always advances every sweep, so thin=1 reproduces today's
+    bits exactly and any thin leaves the final state unchanged."""
     hist0 = jnp.zeros((cbn.n_nodes, cbn.max_card), jnp.int32)
 
     def body(t, carry):
@@ -277,7 +322,8 @@ def gibbs_run_loop(
         onehot = (
             vals[..., None] == jnp.arange(cbn.max_card, dtype=jnp.int32)
         ).astype(jnp.int32)
-        hist = hist + jnp.where(t >= burn_in, onehot.sum(0), 0)
+        keep = (t >= burn_in) & ((t - burn_in) % thin == 0)
+        hist = hist + jnp.where(keep, onehot.sum(0), 0)
         return vals, key, hist
 
     vals, _, hist = jax.lax.fori_loop(0, n_iters, body, (vals, key, hist0))
@@ -290,7 +336,8 @@ def gibbs_run_loop(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("n_chains", "n_iters", "burn_in", "sampler")
+    jax.jit,
+    static_argnames=("n_chains", "n_iters", "burn_in", "sampler", "thin"),
 )
 def run_gibbs(
     cbn: CompiledBayesNet,
@@ -299,6 +346,7 @@ def run_gibbs(
     n_iters: int = 200,
     burn_in: int = 50,
     sampler: str = "lut_ky",
+    thin: int = 1,
 ):
     """Multi-chain chromatic Gibbs; returns (marginals (n, V), final vals).
 
@@ -307,4 +355,6 @@ def run_gibbs(
     iterations, giving every node's marginal at no extra cost (the paper's
     "compute all single marginals without overhead" observation)."""
     vals, key = init_chain_values(cbn, key, n_chains)
-    return gibbs_run_loop(cbn, cbn.groups, vals, key, n_iters, burn_in, sampler)
+    return gibbs_run_loop(
+        cbn, cbn.groups, vals, key, n_iters, burn_in, sampler, thin
+    )

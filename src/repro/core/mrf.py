@@ -84,14 +84,75 @@ def half_step(
     sampler: str = "lut_ky",
     exp_table=None,
     exp_spec=None,
+    pin_mask: jax.Array | None = None,
 ) -> jax.Array:
-    """Update all sites of one checkerboard color simultaneously (Alg. 2)."""
+    """Update all sites of one checkerboard color simultaneously (Alg. 2).
+
+    `pin_mask` ((H, W) bool) excludes pinned pixels from the update: draws
+    are still computed for the whole grid (the random words per site do not
+    depend on the mask, keeping pinned and unpinned runs comparable bit for
+    bit on the free sites of the first half-step), but pinned sites keep
+    their current labels."""
     if exp_table is None:
         exp_table, exp_spec = build_exp_weight_lut()
     logp = site_log_potentials(mrf, labels, evidence)
     new = draw_from_logits(logp, key, sampler, exp_table, exp_spec)
     mask = checkerboard_mask(mrf.height, mrf.width, parity)
+    if pin_mask is not None:
+        mask = mask & ~pin_mask
     return jnp.where(mask, new, labels)
+
+
+def init_labels(
+    mrf: GridMRF,
+    key: jax.Array,
+    n_chains: int,
+    pin_mask: jax.Array | None = None,
+    pin_vals: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Random (B, H, W) label init with pinned pixels clamped to their
+    values; the random tensor covers every site regardless of the mask (same
+    reasoning as `bayesnet.init_chain_values`).  Returns (labels, key)."""
+    k0, key = jax.random.split(key)
+    labels = jax.random.randint(
+        k0, (n_chains, mrf.height, mrf.width), 0, mrf.n_labels, jnp.int32
+    )
+    if pin_mask is not None:
+        labels = jnp.where(pin_mask[None], pin_vals[None], labels)
+    return labels, key
+
+
+def mrf_gibbs_loop(
+    mrf: GridMRF,
+    evidence: jax.Array,
+    key: jax.Array,
+    n_chains: int,
+    n_iters: int,
+    sampler: str,
+    pin_mask: jax.Array | None = None,
+    pin_vals: jax.Array | None = None,
+):
+    """The eager iteration body shared by `run_mrf_gibbs` and the batched
+    serving path (which vmaps it over queries): n_iters x (even half-step,
+    odd half-step), pins held fixed throughout."""
+    exp_table, exp_spec = build_exp_weight_lut()
+    labels, key = init_labels(mrf, key, n_chains, pin_mask, pin_vals)
+
+    def body(t, carry):
+        labels, key = carry
+        key, ka, kb = jax.random.split(key, 3)
+        labels = half_step(
+            mrf, labels, evidence, ka, 0, sampler, exp_table, exp_spec,
+            pin_mask,
+        )
+        labels = half_step(
+            mrf, labels, evidence, kb, 1, sampler, exp_table, exp_spec,
+            pin_mask,
+        )
+        return labels, key
+
+    labels, _ = jax.lax.fori_loop(0, n_iters, body, (labels, key))
+    return labels
 
 
 @functools.partial(
@@ -104,30 +165,17 @@ def run_mrf_gibbs(
     n_chains: int = 1,
     n_iters: int = 30,
     sampler: str = "lut_ky",
+    pin_mask: jax.Array | None = None,
+    pin_vals: jax.Array | None = None,
 ):
     """Full chromatic Gibbs: n_iters x (even half-step, odd half-step).
 
     Returns final labels (B, H, W) — the approximate MPE state for the
-    denoising benchmarks (paper Eqn. 4)."""
-    exp_table, exp_spec = build_exp_weight_lut()
-    k0, key = jax.random.split(key)
-    labels = jax.random.randint(
-        k0, (n_chains, mrf.height, mrf.width), 0, mrf.n_labels, jnp.int32
+    denoising benchmarks (paper Eqn. 4).  `pin_mask`/`pin_vals` ((H, W)
+    bool / int32) clamp pixels at known labels for the whole run."""
+    return mrf_gibbs_loop(
+        mrf, evidence, key, n_chains, n_iters, sampler, pin_mask, pin_vals
     )
-
-    def body(t, carry):
-        labels, key = carry
-        key, ka, kb = jax.random.split(key, 3)
-        labels = half_step(
-            mrf, labels, evidence, ka, 0, sampler, exp_table, exp_spec
-        )
-        labels = half_step(
-            mrf, labels, evidence, kb, 1, sampler, exp_table, exp_spec
-        )
-        return labels, key
-
-    labels, _ = jax.lax.fori_loop(0, n_iters, body, (labels, key))
-    return labels
 
 
 def total_energy(mrf: GridMRF, labels: jax.Array, evidence: jax.Array):

@@ -95,27 +95,52 @@ def load_compile(results_dir: str) -> list[dict]:
 
 def compile_table(recs: list[dict]) -> str:
     """Per-workload view of the `repro.compile` chain: compile cost, cache
-    behavior, the schedule the passes chose vs a random placement, and the
-    eager-vs-schedule backend wall-clock per sweep."""
+    behavior (hit rate, evictions, resident size/capacity), the schedule
+    the passes chose vs a random placement, and the eager-vs-schedule
+    backend wall-clock per sweep."""
     rows = [
         "| workload | kind | nodes | colors | compile cold | cache hit | "
-        "hit rate | sweep cycles | vs random | hop-bytes | vs random | "
-        "eager sweep | schedule sweep |",
-        "|---|---|---|---|---|---|---|---|---|---|---|---|---|",
+        "hit rate | evict | cached | sweep cycles | vs random | hop-bytes | "
+        "vs random | eager sweep | schedule sweep |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|",
     ]
     for r in sorted(recs, key=lambda r: (r["kind"], r["n_nodes"])):
         cyc_win = r["random_sweep_cycles"] / max(r["sweep_cycles"], 1)
         hop_win = r["random_hop_bytes"] / max(r["comm_hop_bytes"], 1)
         eager = r.get("eager_sweep_s")
         sched = r.get("schedule_sweep_s")
+        evict = r.get("cache_evictions")
+        size, cap = r.get("cache_size"), r.get("cache_capacity")
+        cached = f"{size}/{cap}" if size is not None else "—"
         rows.append(
             f"| {r['workload']} | {r['kind']} | {r['n_nodes']} "
             f"| {r['n_colors']} | {r['compile_cold_ms']:.1f}ms "
             f"| {r['compile_warm_us']:.0f}us | {r['cache_hit_rate']:.2f} "
+            f"| {evict if evict is not None else '—'} | {cached} "
             f"| {r['sweep_cycles']} | {cyc_win:.2f}x "
             f"| {r['comm_hop_bytes']} | {hop_win:.2f}x "
             f"| {_fmt_s(eager) if eager is not None else '—'} "
             f"| {_fmt_s(sched) if sched is not None else '—'} |"
+        )
+    return "\n".join(rows)
+
+
+def runtime_table(recs: list[dict]) -> str:
+    """Serving-runtime view (`benchmarks/bench_runtime.py`): batched engine
+    vs the one-query-at-a-time baseline on the same trace."""
+    rows = [
+        "| trace | backend | models | queries | mean batch | batched qps | "
+        "serial qps | speedup | hit rate | evict | recompiles | sim p95 |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(recs, key=lambda r: (r["trace"], r["backend"])):
+        rows.append(
+            f"| {r['trace']} | {r['backend']} | {r['n_models']} "
+            f"| {r['n_queries']} | {r['mean_batch']:.2f} "
+            f"| {r['batched_qps']:.1f} | {r['serial_qps']:.1f} "
+            f"| {r['speedup']:.2f}x | {r['cache_hit_rate']:.3f} "
+            f"| {r['cache_evictions']} | {r['recompiles']} "
+            f"| {r['sim_latency_p95_ms']:.2f}ms |"
         )
     return "\n".join(rows)
 
@@ -167,3 +192,8 @@ if __name__ == "__main__":
     if crecs:
         print("\n## Compile chain (repro.compile)\n")
         print(compile_table(crecs))
+    rdir = os.path.join(os.path.dirname(d), "runtime")
+    rrecs = load_compile(rdir) if os.path.isdir(rdir) else []
+    if rrecs:
+        print("\n## Serving runtime (repro.runtime)\n")
+        print(runtime_table(rrecs))

@@ -1,0 +1,47 @@
+"""`repro.runtime` — batched posterior-query serving over compiled programs.
+
+The serving layer the ROADMAP's north star asks for: many users, many
+models, one box.  A query names a registered model plus its runtime
+observations (BN evidence clamps / MRF images and pinned pixels); the
+engine canonicalizes models *structure-only* so every query on a model
+shares one compiled program, buckets compatible queries, and answers each
+microbatch with a single vmapped dispatch of the schedule-direct backend.
+
+    from repro.runtime import Engine, zipf_trace
+
+    models, queries = zipf_trace(60, quick=True)
+    eng = Engine(models)            # backend="schedule" is the default here
+    eng.submit(queries)
+    results = eng.run()             # {qid: QueryResult}
+    print(eng.metrics.table())
+
+`python -m repro.runtime --trace zipf --quick` replays the synthetic Zipf
+trace from the CLI.
+"""
+
+from repro.runtime.batcher import (
+    BucketKey,
+    Query,
+    QueryResult,
+    bucket_key,
+    execute_bucket,
+    pad_size,
+)
+from repro.runtime.engine import Engine, EngineConfig
+from repro.runtime.metrics import BatchRecord, RuntimeMetrics
+from repro.runtime.trace import zipf_models, zipf_trace
+
+__all__ = [
+    "BucketKey",
+    "Query",
+    "QueryResult",
+    "bucket_key",
+    "execute_bucket",
+    "pad_size",
+    "Engine",
+    "EngineConfig",
+    "BatchRecord",
+    "RuntimeMetrics",
+    "zipf_models",
+    "zipf_trace",
+]

@@ -1,0 +1,70 @@
+"""Trace-replay CLI for the serving runtime.
+
+    PYTHONPATH=src python -m repro.runtime --trace zipf --quick
+
+Replays a synthetic query trace through the engine and prints the serving
+dashboard (latency percentiles in simulated time, throughput, cache and
+recompile behavior).  CI runs the quick Zipf replay as a smoke job.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.runtime.engine import Engine, EngineConfig
+from repro.runtime.trace import zipf_trace
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="repro.runtime")
+    ap.add_argument("--trace", default="zipf", choices=["zipf"],
+                    help="trace family to replay")
+    ap.add_argument("--quick", action="store_true",
+                    help="small budgets (CI smoke)")
+    ap.add_argument("--queries", type=int, default=150)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", default="schedule",
+                    choices=["schedule", "eager"],
+                    help="execution backend (schedule is the runtime "
+                         "default; eager is the escape hatch)")
+    ap.add_argument("--window-ms", type=float, default=2.0,
+                    help="microbatch admission window, simulated ms")
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--capacity", type=int, default=None,
+                    help="program-cache capacity override")
+    args = ap.parse_args(argv)
+
+    models, queries = zipf_trace(
+        args.queries, quick=args.quick, seed=args.seed
+    )
+    # quick mode pads every microbatch to one size: each distinct batch
+    # shape is a fresh XLA compile, and the CI smoke job wants the serving
+    # path exercised, not the jit cache stress-tested
+    pad_sizes = (args.max_batch,) if args.quick else \
+        tuple(s for s in (1, 2, 4, 8, 16, 32) if s <= args.max_batch)
+    engine = Engine(models, EngineConfig(
+        backend=args.backend,
+        window_s=args.window_ms * 1e-3,
+        max_batch=args.max_batch,
+        pad_sizes=pad_sizes,
+        cache_capacity=args.capacity,
+    ))
+    engine.submit(queries)
+    results = engine.run()
+    s = engine.metrics.summary()
+    print(f"[runtime] trace={args.trace} backend={args.backend} "
+          f"models={len(models)} queries={len(results)}")
+    print(engine.metrics.table())
+    if len(results) != len(queries):
+        print(f"[runtime] ERROR: {len(queries) - len(results)} queries "
+              "unanswered")
+        return 1
+    if s["cache_hit_rate"] < 0.9:
+        print(f"[runtime] ERROR: program-cache hit rate "
+              f"{s['cache_hit_rate']:.3f} < 0.9 on a Zipf trace")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

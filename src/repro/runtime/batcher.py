@@ -1,0 +1,258 @@
+"""Query batching: group, pad, and vmap posterior queries onto programs.
+
+The unit of execution is a *bucket*: every pending query that resolves to
+the same compiled program AND the same static execution signature (BN
+observed-node set, chain/iteration budget, sampler, backend).  Within a
+bucket only per-query *data* varies — evidence values, pin masks,
+observation images, PRNG seeds — so the whole microbatch runs as one
+`jax.vmap` over one jitted executable: one dispatch answers Q queries.
+
+Buckets are padded up to a fixed ladder of sizes (1, 2, 4, ...) so the jit
+cache holds a handful of shapes per bucket signature instead of one per
+occupancy; pad lanes replicate query 0 and their results are dropped.
+
+vmap is semantics-preserving in JAX, so a query's draw stream inside a
+microbatch is bit-identical to running it alone — asserted by
+tests/test_runtime.py, which is what makes batched serving a pure
+throughput win, never an answer change.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compile import backend as backend_mod
+from repro.core import mrf as mrf_mod
+
+PAD_SIZES = (1, 2, 4, 8, 16, 32)
+
+
+@dataclasses.dataclass
+class Query:
+    """One posterior-sampling request against a registered model."""
+
+    qid: int
+    model: str
+    evidence: dict | None = None  # BN: {node: value} clamps; MRF: pins
+    image: np.ndarray | None = None  # MRF observation image (H, W)
+    n_chains: int = 8
+    n_iters: int = 40
+    burn_in: int = 10  # BN marginal accumulation only; ignored for MRF
+    thin: int = 1  # BN marginal accumulation only; ignored for MRF
+    sampler: str = "lut_ky"
+    seed: int = 0
+    arrival_s: float = 0.0
+
+
+@dataclasses.dataclass
+class QueryResult:
+    """What the engine hands back: the posterior payload plus the timeline
+    the simulated clock assigned to this query."""
+
+    qid: int
+    model: str
+    kind: str  # "bn" | "mrf"
+    marginals: np.ndarray | None  # BN: (n, V) streaming marginal estimate
+    final_state: np.ndarray  # BN: (B, n) vals; MRF: (B, H, W) labels
+    arrival_s: float = 0.0
+    start_s: float = 0.0
+    finish_s: float = 0.0
+    batch_size: int = 1
+
+    @property
+    def latency_s(self) -> float:
+        return self.finish_s - self.arrival_s
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketKey:
+    """Everything that must be *static* across a microbatch."""
+
+    program_key: str
+    kind: str
+    clamp_nodes: tuple[int, ...]  # BN observed-node set; () for MRF
+    has_pins: bool  # MRF: whether pin arrays ride along
+    n_chains: int
+    n_iters: int
+    burn_in: int
+    thin: int
+    sampler: str
+    backend: str
+
+
+def bucket_key(query: Query, graph, backend: str) -> BucketKey:
+    """The bucket a query lands in, derived without compiling anything
+    (`graph` is the model's structure-only IR from engine registration).
+
+    MRF execution has no burn-in/thinning concept (it returns final
+    states), so those fields are normalized to 0/1 for MRF queries — both
+    to make the "ignored" semantics explicit and so queries differing only
+    in dead fields share a bucket instead of splintering microbatches."""
+    if graph.kind == "bn":
+        clamp = tuple(sorted(int(k) for k in (query.evidence or {})))
+        has_pins = False
+        burn_in, thin = query.burn_in, query.thin
+    else:
+        clamp = ()
+        has_pins = bool(query.evidence)
+        burn_in, thin = 0, 1
+    return BucketKey(
+        program_key=graph.ir_key,
+        kind=graph.kind,
+        clamp_nodes=clamp,
+        has_pins=has_pins,
+        n_chains=query.n_chains,
+        n_iters=query.n_iters,
+        burn_in=burn_in,
+        thin=thin,
+        sampler=query.sampler,
+        backend=backend,
+    )
+
+
+def pad_size(n: int, sizes=PAD_SIZES) -> int:
+    """Next bucket-ladder size >= n.  Beyond the ladder the batch runs at
+    its exact occupancy — correct, but each distinct size is its own XLA
+    compile, which is why the engine refuses max_batch > max(pad_sizes)."""
+    for s in sizes:
+        if n <= s:
+            return s
+    return n
+
+
+def _seed_array(queries) -> jax.Array:
+    """Per-query PRNG seeds, shipped as one uint32 array; the bucket
+    executables derive `jax.random.key(seed)` per lane *inside* jit (one
+    transfer instead of Q typed-key dispatches, same bits as the
+    single-query path creating its key on the host)."""
+    return jnp.asarray([q.seed for q in queries], jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
+# vmapped bucket executables (jitted once per bucket signature + pad size)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_chains", "n_iters", "burn_in", "thin", "sampler"),
+)
+def _bn_bucket(
+    cbn, groups, ev_vals_q, ev_mask, seeds_q, *,
+    n_chains, n_iters, burn_in, thin, sampler,
+):
+    def one(ev_vals, seed):
+        return backend_mod.bn_rounds_core(
+            cbn, groups, jax.random.key(seed), n_chains=n_chains,
+            n_iters=n_iters, burn_in=burn_in, sampler=sampler, thin=thin,
+            clamp_vals=ev_vals, clamp_mask=ev_mask,
+        )
+
+    return jax.vmap(one)(ev_vals_q, seeds_q)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "mrf", "parities", "n_chains", "n_iters", "sampler", "fused",
+        "interpret", "eager",
+    ),
+)
+def _mrf_bucket(
+    mrf, parities, imgs_q, seeds_q, pmask_q, pvals_q, *,
+    n_chains, n_iters, sampler, fused, interpret, eager,
+):
+    def one(img, seed, pm, pv):
+        key = jax.random.key(seed)
+        if eager:
+            return mrf_mod.mrf_gibbs_loop(
+                mrf, img, key, n_chains, n_iters, sampler,
+                pin_mask=pm, pin_vals=pv,
+            )
+        return backend_mod.mrf_rounds_core(
+            mrf, parities, img, key, n_chains=n_chains, n_iters=n_iters,
+            sampler=sampler, fused=fused, interpret=interpret,
+            pin_mask=pm, pin_vals=pv,
+        )
+
+    if pmask_q is None:
+        return jax.vmap(lambda i, s: one(i, s, None, None))(imgs_q, seeds_q)
+    return jax.vmap(one)(imgs_q, seeds_q, pmask_q, pvals_q)
+
+
+# ---------------------------------------------------------------------------
+# bucket execution
+# ---------------------------------------------------------------------------
+
+
+def execute_bucket(
+    program, key: BucketKey, queries: list[Query], pad_sizes=PAD_SIZES
+) -> list[QueryResult]:
+    """Run one microbatch through its program and unpack per-query results.
+
+    Pads the query list up to the bucket ladder (replicating query 0 —
+    their lanes compute but are discarded), stacks the per-query runtime
+    data, and dispatches a single vmapped executable."""
+    n_real = len(queries)
+    n_pad = pad_size(n_real, pad_sizes)
+    padded = list(queries) + [queries[0]] * (n_pad - n_real)
+    seeds_q = _seed_array(padded)
+    if key.kind == "bn":
+        n = program.ir.n_nodes
+        ev_mask = np.zeros(n, bool)
+        ev_mask[list(key.clamp_nodes)] = True
+        ev_vals = np.zeros((n_pad, n), np.int64)
+        for i, q in enumerate(padded):
+            for node, val in (q.evidence or {}).items():
+                ev_vals[i, int(node)] = int(val)
+        groups = program.clamped_executable(key.clamp_nodes, key.backend)
+        marg, vals = _bn_bucket(
+            program.cbn, groups, jnp.asarray(ev_vals, jnp.int32),
+            jnp.asarray(ev_mask), seeds_q,
+            n_chains=key.n_chains, n_iters=key.n_iters, burn_in=key.burn_in,
+            thin=key.thin, sampler=key.sampler,
+        )
+        marg, vals = np.asarray(marg), np.asarray(vals)
+        return [
+            QueryResult(
+                qid=q.qid, model=q.model, kind="bn", marginals=marg[i],
+                final_state=vals[i], arrival_s=q.arrival_s,
+                batch_size=n_real,
+            )
+            for i, q in enumerate(queries)
+        ]
+    mrf = program.mrf
+    imgs = jnp.asarray(
+        np.stack([np.asarray(q.image, np.int32) for q in padded])
+    )
+    pmask_q = pvals_q = None
+    if key.has_pins:
+        masks, vals = [], []
+        for q in padded:
+            m, v = backend_mod.pin_arrays(mrf, q.evidence or {})
+            masks.append(m)
+            vals.append(v)
+        pmask_q, pvals_q = jnp.stack(masks), jnp.stack(vals)
+    if key.backend == "schedule":
+        ex = program.schedule_executable()
+        parities, eager = ex.parities, False
+    else:
+        parities, eager = (0, 1), True
+    labels = _mrf_bucket(
+        mrf, parities, imgs, seeds_q, pmask_q, pvals_q,
+        n_chains=key.n_chains, n_iters=key.n_iters, sampler=key.sampler,
+        fused=False, interpret=jax.default_backend() != "tpu", eager=eager,
+    )
+    labels = np.asarray(labels)
+    return [
+        QueryResult(
+            qid=q.qid, model=q.model, kind="mrf", marginals=None,
+            final_state=labels[i], arrival_s=q.arrival_s, batch_size=n_real,
+        )
+        for i, q in enumerate(queries)
+    ]

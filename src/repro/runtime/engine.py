@@ -1,0 +1,223 @@
+"""The serving engine: a deterministic event loop over batched queries.
+
+This is the software analogue of the AIA chip's query-serving posture —
+many concurrent posterior queries amortized over fixed compiled hardware.
+The engine owns a registry of models (canonicalized structure-only, so
+every query on a model shares one `ir_key` and therefore one program-cache
+slot), admits queries from a trace, groups them into buckets
+(`batcher.BucketKey`), and flushes a bucket when it fills to `max_batch`
+or its oldest query has waited out the microbatch window.
+
+Time is *simulated*: the clock advances by a line-model service time
+derived from the program's schedule cost (launch overhead + cycles per
+sweep x iterations x chain waves), never by wall time.  That makes every
+latency number deterministic — the whole loop is single-threaded and
+replayable, so tests can pin p95s to the digit — while the actual sampling
+math still runs for real underneath (results are genuine posteriors).
+
+`backend="schedule"` is the default here (the runtime is the soak path the
+ROADMAP wants for schedule-direct execution); `Engine(..., backend=
+"eager")` is the escape hatch back to the eager engines.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+
+from repro.compile import compile_graph, set_cache_capacity
+from repro.compile import ir as ir_mod
+from repro.core.graphs import DiscreteBayesNet, GridMRF
+from repro.runtime import batcher as batcher_mod
+from repro.runtime.batcher import BucketKey, Query, QueryResult
+from repro.runtime.metrics import BatchRecord, RuntimeMetrics
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    backend: str = "schedule"  # runtime default; "eager" is the escape hatch
+    pipeline: str = "runtime"  # pass list incl. merge_small_colors
+    mesh_shape: tuple[int, int] = (4, 4)
+    window_s: float = 0.002  # microbatch admission window (simulated)
+    max_batch: int = 8
+    pad_sizes: tuple[int, ...] = batcher_mod.PAD_SIZES
+    cache_capacity: int | None = None  # None: leave the global setting
+    # line service model: cycles -> seconds at the modeled clock, one
+    # launch overhead per microbatch, one wave per `chain_slots` chains
+    clock_hz: float = 500e6
+    launch_overhead_cycles: int = 50_000
+    chain_slots: int = 256
+
+
+class Engine:
+    """Deterministic batched serving over the compiled-program cache."""
+
+    def __init__(
+        self,
+        models: dict[str, DiscreteBayesNet | GridMRF],
+        config: EngineConfig | None = None,
+        **overrides,
+    ):
+        if config is None:
+            config = EngineConfig(**overrides)
+        elif overrides:
+            config = dataclasses.replace(config, **overrides)
+        if config.backend not in ("eager", "schedule"):
+            raise ValueError(f"unknown backend {config.backend!r}")
+        if config.max_batch > max(config.pad_sizes):
+            raise ValueError(
+                f"max_batch {config.max_batch} exceeds the pad ladder "
+                f"{config.pad_sizes}; every flush size must pad to a ladder "
+                "shape or each occupancy becomes a fresh compile"
+            )
+        self.config = config
+        # structure-only canonicalization: per-query evidence never touches
+        # the IR, so every query on a model maps to the same program key
+        self.graphs = {
+            name: ir_mod.canonicalize(m, evidence_mode="runtime")
+            for name, m in models.items()
+        }
+        if config.cache_capacity is not None:
+            set_cache_capacity(config.cache_capacity)
+        self.metrics = RuntimeMetrics()
+        self._queue: list[Query] = []
+
+    # -- admission ---------------------------------------------------------
+
+    def submit(self, queries) -> None:
+        """Admission-time validation: a bad query must be rejected here,
+        with the same range rules `CompiledProgram.run()` enforces on the
+        single-query path — inside a microbatch an out-of-range (or
+        negatively indexed) clamp would otherwise feed the gathers
+        silently and serve a wrong posterior."""
+        for q in queries:
+            if q.model not in self.graphs:
+                raise KeyError(f"unregistered model {q.model!r}")
+            graph = self.graphs[q.model]
+            if graph.kind == "mrf" and q.image is None:
+                raise ValueError(
+                    f"query {q.qid}: MRF queries carry an observation image"
+                )
+            for node, val in (q.evidence or {}).items():
+                node, val = int(node), int(val)
+                if not (0 <= node < graph.n_nodes
+                        and 0 <= val < graph.cards[node]):
+                    what = "evidence" if graph.kind == "bn" else "pin"
+                    raise ValueError(
+                        f"query {q.qid}: {what} {node}={val} out of range"
+                    )
+            self._queue.append(q)
+
+    # -- program + service model -------------------------------------------
+
+    def _program(self, model: str):
+        return compile_graph(
+            self.graphs[model],
+            mesh_shape=self.config.mesh_shape,
+            pipeline=self.config.pipeline,
+        )
+
+    def _service_s(self, program, key: BucketKey, n_padded: int) -> float:
+        """Line service model (relative units, like `schedule.cost`): the
+        microbatch pays one launch overhead, then every sweep costs the
+        schedule's cycle estimate, repeated for each wave of chains the
+        padded batch occupies."""
+        cfg = self.config
+        sweep = program.schedule.cost()["total_cycles"]
+        waves = -(-n_padded * key.n_chains // cfg.chain_slots)
+        cycles = cfg.launch_overhead_cycles + sweep * key.n_iters * waves
+        return cycles / cfg.clock_hz
+
+    # -- the event loop ----------------------------------------------------
+
+    def run(self) -> dict[int, QueryResult]:
+        """Drain the submitted queries; returns {qid: QueryResult}.
+
+        Single pass, deterministic: admission at the simulated clock,
+        bucket flush on fill-or-window, service time from the line model.
+        The executor is serial (one device), so flushed batches serialize
+        on the clock in flush order."""
+        cfg = self.config
+        wall0 = time.perf_counter()
+        incoming = collections.deque(
+            sorted(self._queue, key=lambda q: (q.arrival_s, q.qid))
+        )
+        self._queue = []
+        pending: dict[BucketKey, list[Query]] = {}
+        programs: dict[BucketKey, object] = {}
+        clock = 0.0
+        results: dict[int, QueryResult] = {}
+
+        def admit():
+            while incoming and incoming[0].arrival_s <= clock:
+                q = incoming.popleft()
+                key = batcher_mod.bucket_key(
+                    q, self.graphs[q.model], cfg.backend
+                )
+                # the program cache's front door: one lookup per admitted
+                # query (this is the hit rate the metrics report), and the
+                # resolved program rides with the bucket to its flush
+                programs[key] = self._program(q.model)
+                pending.setdefault(key, []).append(q)
+
+        def oldest(key):
+            return min(q.arrival_s for q in pending[key])
+
+        admit()
+        while incoming or pending:
+            # NB: the readiness test and the idle-advance horizon must use
+            # the *identical* float expression `oldest + window`; computing
+            # one as `clock - oldest >= window` lets rounding disagree with
+            # the horizon and spin the loop at a frozen clock
+            ready = [
+                k for k, qs in pending.items()
+                if len(qs) >= cfg.max_batch
+                or clock >= oldest(k) + cfg.window_s
+                or not incoming
+            ]
+            if not ready:
+                # idle: jump to the next arrival or the next window expiry
+                horizons = [incoming[0].arrival_s] if incoming else []
+                horizons += [oldest(k) + cfg.window_s for k in pending]
+                clock = max(clock, min(horizons))
+                admit()
+                continue
+            key = min(ready, key=lambda k: (oldest(k), repr(k)))
+            qs = sorted(
+                pending[key], key=lambda q: (q.arrival_s, q.qid)
+            )[: cfg.max_batch]
+            taken = {q.qid for q in qs}
+            remaining = [q for q in pending[key] if q.qid not in taken]
+            if remaining:
+                pending[key] = remaining
+            else:
+                del pending[key]
+            results_batch = self._flush(programs[key], key, qs, clock)
+            clock = results_batch[0].finish_s
+            for r in results_batch:
+                results[r.qid] = r
+            admit()
+        self.metrics.wall_s = time.perf_counter() - wall0
+        self.metrics.finalize()
+        return results
+
+    def _flush(
+        self, program, key: BucketKey, qs: list[Query], clock: float
+    ) -> list[QueryResult]:
+        lower0 = program.clamp_lowerings
+        batch = batcher_mod.execute_bucket(
+            program, key, qs, self.config.pad_sizes
+        )
+        n_padded = batcher_mod.pad_size(len(qs), self.config.pad_sizes)
+        service = self._service_s(program, key, n_padded)
+        for r in batch:
+            r.start_s = clock
+            r.finish_s = clock + service
+        self.metrics.record_batch(BatchRecord(
+            model=qs[0].model, kind=key.kind, n_real=len(qs),
+            n_padded=n_padded, service_s=service,
+            clamp_lowerings=program.clamp_lowerings - lower0,
+        ))
+        self.metrics.record_queries(batch)
+        return batch

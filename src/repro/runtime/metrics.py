@@ -1,0 +1,113 @@
+"""Serving metrics for the runtime engine: latency percentiles, throughput,
+and the cache behavior that makes or breaks a sampling-as-a-service box.
+
+Latency/throughput numbers are in *simulated* seconds (the engine's
+deterministic clock — same trace, same numbers, every run, which is what
+the tests pin down); `wall_s` is the only wall-clock field and is excluded
+from determinism comparisons.  Cache counters are deltas over the engine
+run, not process-lifetime totals, so one summary describes one trace.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.compile import cache_stats
+
+
+@dataclasses.dataclass
+class BatchRecord:
+    model: str
+    kind: str
+    n_real: int
+    n_padded: int
+    service_s: float
+    clamp_lowerings: int
+
+
+class RuntimeMetrics:
+    """Accumulates per-query and per-batch records during an engine run."""
+
+    def __init__(self):
+        self.query_records: list = []  # QueryResult, finalized
+        self.batch_records: list[BatchRecord] = []
+        self._cache0 = dict(cache_stats())
+        self._cache_frozen: dict | None = None
+        self.wall_s = 0.0
+
+    def record_batch(self, rec: BatchRecord) -> None:
+        self.batch_records.append(rec)
+
+    def record_queries(self, results) -> None:
+        self.query_records.extend(results)
+
+    def finalize(self) -> None:
+        """Freeze the cache delta at end-of-run (the engine calls this):
+        cache counters are process-global, so a summary computed later —
+        after other engines or baselines have run — must not absorb their
+        traffic."""
+        self._cache_frozen = self.cache_delta()
+
+    def cache_delta(self) -> dict:
+        if self._cache_frozen is not None:
+            return dict(self._cache_frozen)
+        now = cache_stats()
+        delta = {
+            k: now[k] - self._cache0[k]
+            for k in ("hits", "misses", "evictions")
+        }
+        delta["size"] = now["size"]
+        delta["capacity"] = now["capacity"]
+        total = delta["hits"] + delta["misses"]
+        delta["hit_rate"] = delta["hits"] / total if total else 0.0
+        return delta
+
+    def summary(self) -> dict:
+        lat = np.array([r.latency_s for r in self.query_records])
+        cache = self.cache_delta()
+        clamp_lowerings = sum(b.clamp_lowerings for b in self.batch_records)
+        finish = max((r.finish_s for r in self.query_records), default=0.0)
+        n = len(self.query_records)
+        return {
+            "n_queries": n,
+            "n_batches": len(self.batch_records),
+            "mean_batch": n / max(len(self.batch_records), 1),
+            "pad_efficiency": (
+                sum(b.n_real for b in self.batch_records)
+                / max(sum(b.n_padded for b in self.batch_records), 1)
+            ),
+            "latency_p50_ms": float(np.percentile(lat, 50)) * 1e3 if n else 0.0,
+            "latency_p95_ms": float(np.percentile(lat, 95)) * 1e3 if n else 0.0,
+            "latency_mean_ms": float(lat.mean()) * 1e3 if n else 0.0,
+            "sim_elapsed_s": finish,
+            "throughput_qps": n / finish if finish else 0.0,
+            "cache_hits": cache["hits"],
+            "cache_misses": cache["misses"],
+            "cache_evictions": cache["evictions"],
+            "cache_size": cache["size"],
+            "cache_capacity": cache["capacity"],
+            "cache_hit_rate": cache["hit_rate"],
+            "recompiles": cache["misses"] + clamp_lowerings,
+            "clamp_lowerings": clamp_lowerings,
+            "wall_s": self.wall_s,
+        }
+
+    def table(self) -> str:
+        """Render the summary as the runtime dashboard block."""
+        s = self.summary()
+        rows = [
+            "| queries | batches | mean batch | pad eff | p50 | p95 | "
+            "sim qps | hit rate | evict | recompiles | wall |",
+            "|---|---|---|---|---|---|---|---|---|---|---|",
+            (
+                f"| {s['n_queries']} | {s['n_batches']} "
+                f"| {s['mean_batch']:.2f} | {s['pad_efficiency']:.2f} "
+                f"| {s['latency_p50_ms']:.2f}ms | {s['latency_p95_ms']:.2f}ms "
+                f"| {s['throughput_qps']:.1f} | {s['cache_hit_rate']:.3f} "
+                f"| {s['cache_evictions']} | {s['recompiles']} "
+                f"| {s['wall_s']:.2f}s |"
+            ),
+        ]
+        return "\n".join(rows)

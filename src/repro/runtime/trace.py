@@ -1,0 +1,121 @@
+"""Synthetic serving traces: Zipf-over-models query streams.
+
+Real sampling-as-a-service traffic is heavy-tailed over a model zoo — a few
+hot models take most queries, a long tail stays warm in the cache.  The
+Zipf trace models exactly that: model i is drawn with probability
+proportional to 1/(i+1)^s, arrivals are a Poisson process (exponential
+interarrivals), and per-query observations are sampled from a small pool of
+observation *patterns* per model (real deployments re-use feature masks far
+more than feature values, which is what makes clamp-set bucketing pay off).
+
+Everything is seeded `numpy.random.default_rng` — the same (seed, quick)
+pair replays the identical trace, which the engine's deterministic clock
+turns into identical metrics.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.graphs import GridMRF, bn_repository_replica
+from repro.core.mrf import make_denoising_problem
+from repro.runtime.batcher import Query
+
+
+def zipf_models(quick: bool = False) -> dict:
+    """The model zoo, hottest first (rank order = Zipf rank).  The quick
+    zoo is deliberately small: every (model, observation-pattern) pair is
+    a distinct executable to compile, and the CI smoke budget is minutes."""
+    names = ["survey", "cancer", "asia"]
+    if not quick:
+        names += ["sachs", "insurance", "alarm"]
+    models = {n: bn_repository_replica(n) for n in names}
+    size = 8 if quick else 16
+    models["grid"] = GridMRF(size, size, 3, theta=1.1, h=1.8, name="grid")
+    return models
+
+
+def zipf_trace(
+    n_queries: int = 150,
+    *,
+    quick: bool = False,
+    seed: int = 0,
+    s: float = 1.1,
+    mean_interarrival_s: float = 1e-4,
+    n_patterns: int = 2,
+    n_chains: int = 8,
+    n_iters: int = 40,
+    burn_in: int = 10,
+) -> tuple[dict, list[Query]]:
+    """Build (models, queries) for a Zipf-distributed posterior workload.
+
+    BN queries observe one of `n_patterns` fixed node subsets per model
+    (values re-drawn per query); MRF queries carry a fresh noisy image and,
+    half the time, a few pinned pixels.  Returns models keyed by name and
+    queries sorted by arrival time."""
+    if quick:
+        n_queries = min(n_queries, 60)
+        n_iters = min(n_iters, 16)
+        n_chains = min(n_chains, 4)
+        burn_in = min(burn_in, 4)
+        n_patterns = 1  # one executable per model in the CI smoke budget
+    rng = np.random.default_rng(seed)
+    models = zipf_models(quick)
+    names = list(models)
+    weights = 1.0 / np.arange(1, len(names) + 1) ** s
+    weights /= weights.sum()
+
+    # per-BN-model pool of observed-node patterns (the serving reality that
+    # makes static clamp sets cacheable)
+    patterns: dict[str, list[np.ndarray]] = {}
+    for name, m in models.items():
+        if isinstance(m, GridMRF):
+            continue
+        k = max(1, m.n_nodes // 4)
+        patterns[name] = [
+            rng.choice(m.n_nodes, size=min(k, m.n_nodes - 1), replace=False)
+            for _ in range(n_patterns)
+        ]
+
+    queries: list[Query] = []
+    clock = 0.0
+    for qid in range(n_queries):
+        clock += float(rng.exponential(mean_interarrival_s))
+        name = names[int(rng.choice(len(names), p=weights))]
+        m = models[name]
+        if isinstance(m, GridMRF):
+            _, noisy = make_denoising_problem(
+                m.height, m.width, m.n_labels, noise=0.25,
+                seed=int(rng.integers(1 << 16)),
+            )
+            # pinned and unpinned MRF buckets are distinct executables;
+            # the quick trace pins everything to compile just one
+            pins = None
+            if quick or rng.random() < 0.5:
+                sites = rng.choice(
+                    m.height * m.width, size=3, replace=False
+                )
+                pins = {
+                    int(p): int(rng.integers(m.n_labels)) for p in sites
+                }
+            queries.append(Query(
+                qid=qid, model=name, evidence=pins, image=noisy,
+                n_chains=n_chains, n_iters=n_iters, burn_in=0,
+                seed=int(rng.integers(1 << 30)), arrival_s=clock,
+            ))
+        else:
+            nodes = patterns[name][int(rng.integers(len(patterns[name])))]
+            ev = {
+                int(v): int(rng.integers(m.cards[v])) for v in nodes
+            }
+            # per-query thinning splits buckets (it is a static loop
+            # parameter), so the quick/CI trace keeps thin=1 to bound the
+            # number of distinct executables it compiles
+            thin = 1 if quick else int(rng.choice([1, 2]))
+            queries.append(Query(
+                qid=qid, model=name, evidence=ev,
+                n_chains=n_chains, n_iters=n_iters, burn_in=burn_in,
+                thin=thin,
+                seed=int(rng.integers(1 << 30)), arrival_s=clock,
+            ))
+    return models, queries

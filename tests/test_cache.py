@@ -1,0 +1,137 @@
+"""Program-cache behavior: LRU eviction order under capacity pressure,
+stats lifecycle across clears, capacity as a runtime knob, and the
+structure-only `ir_key` stability that runtime-evidence serving relies on."""
+
+import pytest
+
+from repro.compile import (
+    cache_stats,
+    canonicalize,
+    clear_program_cache,
+    compile_graph,
+    set_cache_capacity,
+)
+from repro.compile import ir as compile_ir
+from repro.core.graphs import GridMRF, random_bayesnet
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    clear_program_cache()
+    prev = set_cache_capacity(128)
+    yield
+    set_cache_capacity(prev)
+    clear_program_cache()
+
+
+def _bn(seed):
+    return random_bayesnet(6, max_parents=2, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# LRU eviction order
+# ---------------------------------------------------------------------------
+
+
+def test_eviction_order_under_capacity_pressure():
+    """Least-recently-used falls out first; a hit refreshes recency."""
+    set_cache_capacity(2)
+    p0 = compile_graph(_bn(0))
+    p1 = compile_graph(_bn(1))
+    assert compile_graph(_bn(0)) is p0  # refresh bn0: LRU order is now 1, 0
+    compile_graph(_bn(2))  # evicts bn1, not bn0
+    stats = cache_stats()
+    assert stats["evictions"] == 1 and stats["size"] == 2
+    assert compile_graph(_bn(0)) is p0  # still resident
+    assert compile_graph(_bn(1)) is not p1  # was evicted: fresh compile
+    assert cache_stats()["evictions"] == 2  # bn2 fell out re-admitting bn1
+
+
+def test_shrinking_capacity_evicts_immediately():
+    for s in range(4):
+        compile_graph(_bn(s))
+    assert cache_stats()["size"] == 4
+    prev = set_cache_capacity(2)
+    assert prev == 128  # the fixture's setting comes back for restoration
+    stats = cache_stats()
+    assert stats["size"] == 2 and stats["evictions"] == 2
+    assert stats["capacity"] == 2
+    # the survivors are the most recently inserted
+    assert cache_stats()["hits"] == 0
+    compile_graph(_bn(3))
+    assert cache_stats()["hits"] == 1
+
+
+def test_capacity_validation():
+    with pytest.raises(ValueError):
+        set_cache_capacity(0)
+
+
+# ---------------------------------------------------------------------------
+# stats lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_stats_reset_after_clear():
+    compile_graph(_bn(0))
+    compile_graph(_bn(0))
+    set_cache_capacity(1)
+    compile_graph(_bn(1))
+    stats = cache_stats()
+    assert stats["hits"] == 1 and stats["misses"] == 2
+    assert stats["evictions"] == 1
+    clear_program_cache()
+    stats = cache_stats()
+    assert stats["hits"] == stats["misses"] == stats["evictions"] == 0
+    assert stats["size"] == 0 and stats["hit_rate"] == 0.0
+    assert stats["capacity"] == 1  # capacity is a knob, not a counter
+
+
+# ---------------------------------------------------------------------------
+# structure-only keying (the serving-path invariant)
+# ---------------------------------------------------------------------------
+
+
+def test_structure_only_key_stable_across_evidence_variations():
+    """Runtime-mode IRs hash structure only: every evidence variation maps
+    to one cached program, where baked mode forces one program each."""
+    bn = _bn(3)
+    rt = canonicalize(bn, evidence_mode="runtime")
+    assert rt.ir_key == canonicalize(bn, evidence_mode="runtime").ir_key
+    prog = compile_graph(rt)
+    for ev in ({0: 1}, {0: 0}, {2: 1, 4: 0}):
+        assert compile_graph(canonicalize(bn, evidence_mode="runtime")) is prog
+        # ...while baking the same dicts creates distinct programs
+        assert compile_graph(bn, evidence=ev) is not prog
+    stats = cache_stats()
+    assert stats["hits"] == 3  # the three runtime re-submissions
+    assert stats["misses"] == 4  # structure-only + three baked variants
+
+
+def test_runtime_and_baked_modes_never_share_a_slot():
+    bn = _bn(5)
+    baked = compile_ir.from_bayesnet(bn)  # no evidence, but baked-mode
+    rt = compile_ir.from_bayesnet(bn, evidence_mode="runtime")
+    assert baked.ir_key != rt.ir_key
+    assert compile_graph(baked) is not compile_graph(rt)
+
+
+def test_mrf_pins_key_like_bn_evidence():
+    mrf = GridMRF(4, 4, 2)
+    plain = compile_ir.from_mrf(mrf)
+    pinned = compile_ir.from_mrf(mrf, pinned={0: 1})
+    assert plain.evidence_mode == "runtime"
+    assert pinned.evidence_mode == "baked"
+    assert plain.ir_key != pinned.ir_key
+
+
+def test_pipeline_name_is_part_of_the_cache_key():
+    bn = _bn(7)
+    d = compile_graph(bn)
+    r = compile_graph(bn, pipeline="runtime")
+    assert d is not r
+    assert compile_graph(bn) is d
+    assert compile_graph(bn, pipeline="runtime") is r
+    assert cache_stats()["size"] == 2
+    with pytest.raises(ValueError):
+        compile_graph(bn, pipeline="nonesuch")

@@ -1,0 +1,449 @@
+"""repro.runtime: runtime evidence clamping bit-exact with baked-evidence
+compilation (every sampler, both backends), MRF pinned pixels, microbatch
+bucketing/vmap equivalence, the merge_small_colors pass, and the
+deterministic serving engine."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.compile import (
+    canonicalize,
+    clear_program_cache,
+    compile_graph,
+    lower_schedule,
+    run_pipeline,
+)
+from repro.compile import ir as compile_ir
+from repro.compile.backend import ScheduleLoweringError
+from repro.compile.passes import (
+    MergeSmallColorsPass,
+    named_pipeline,
+    runtime_pipeline,
+)
+from repro.compile.schedule import verify_schedule
+from repro.core import mrf as mrf_mod
+from repro.core.draws import SAMPLERS
+from repro.core.graphs import GridMRF, bn_repository_replica, random_bayesnet
+from repro.runtime import (
+    Engine,
+    EngineConfig,
+    Query,
+    bucket_key,
+    execute_bucket,
+    pad_size,
+    zipf_trace,
+)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    clear_program_cache()
+    yield
+    clear_program_cache()
+
+
+# ---------------------------------------------------------------------------
+# Tentpole guarantee: runtime clamping == baked-evidence compilation
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("sampler", SAMPLERS)
+def test_bn_runtime_clamp_bit_exact_with_baked(sampler):
+    """The acceptance gate: for every sampler, clamping evidence at run()
+    on a structure-only program gives the same bits as baking the same
+    evidence at compile time — on both backends."""
+    bn = random_bayesnet(12, max_parents=3, cards=(2, 3), seed=7)
+    ev = {1: 0, 5: 1, 9: 0}
+    baked = compile_graph(bn, evidence=ev)
+    rt = compile_graph(canonicalize(bn, evidence_mode="runtime"))
+    kwargs = dict(n_chains=4, n_iters=10, burn_in=2, sampler=sampler)
+    for backend in ("eager", "schedule"):
+        mb, vb = baked.run(jax.random.key(3), backend=backend, **kwargs)
+        mr, vr = rt.run(
+            jax.random.key(3), evidence=ev, backend=backend, **kwargs
+        )
+        np.testing.assert_array_equal(np.asarray(vb), np.asarray(vr))
+        np.testing.assert_array_equal(np.asarray(mb), np.asarray(mr))
+
+
+def test_bn_runtime_clamp_bit_exact_on_runtime_pipeline():
+    """Same guarantee under the serving pipeline (merged colors)."""
+    bn = bn_repository_replica("insurance")
+    ev = {3: 1, 10: 0}
+    baked = compile_graph(bn, evidence=ev, pipeline="runtime")
+    rt = compile_graph(
+        canonicalize(bn, evidence_mode="runtime"), pipeline="runtime"
+    )
+    kwargs = dict(n_chains=2, n_iters=8, burn_in=2)
+    for backend in ("eager", "schedule"):
+        mb, vb = baked.run(jax.random.key(1), backend=backend, **kwargs)
+        mr, vr = rt.run(
+            jax.random.key(1), evidence=ev, backend=backend, **kwargs
+        )
+        np.testing.assert_array_equal(np.asarray(vb), np.asarray(vr))
+        np.testing.assert_array_equal(np.asarray(mb), np.asarray(mr))
+
+
+@pytest.mark.parametrize("sampler", SAMPLERS)
+def test_mrf_runtime_pins_bit_exact_with_baked(sampler):
+    """MRF pinned pixels at run() == the same pins baked into the IR."""
+    mrf = GridMRF(8, 8, 3, theta=1.1, h=1.5)
+    pins = {0: 2, 9: 1, 20: 0}
+    baked = compile_graph(compile_ir.from_mrf(mrf, pinned=pins))
+    rt = compile_graph(compile_ir.from_mrf(mrf))
+    _, noisy = mrf_mod.make_denoising_problem(8, 8, 3, 0.25, seed=0)
+    img = jnp.asarray(noisy)
+    kwargs = dict(n_chains=2, n_iters=6, sampler=sampler, evidence=img)
+    for backend in ("eager", "schedule"):
+        lb = baked.run(jax.random.key(2), backend=backend, **kwargs)
+        lr = rt.run(jax.random.key(2), pins=pins, backend=backend, **kwargs)
+        np.testing.assert_array_equal(np.asarray(lb), np.asarray(lr))
+    # pinned pixels hold their labels in every chain
+    lab = np.asarray(lr)
+    for site, val in pins.items():
+        assert (lab[:, site // 8, site % 8] == val).all()
+
+
+def test_mrf_fused_rounds_respect_pins():
+    mrf = GridMRF(8, 8, 4, theta=1.0, h=1.5)
+    pins = {5: 3, 17: 0}
+    rt = compile_graph(compile_ir.from_mrf(mrf))
+    _, noisy = mrf_mod.make_denoising_problem(8, 8, 4, 0.3, seed=2)
+    img = jnp.asarray(noisy)
+    lab_u = rt.run(
+        jax.random.key(3), n_chains=2, n_iters=4, evidence=img, pins=pins,
+        backend="schedule",
+    )
+    lab_f = rt.run(
+        jax.random.key(3), n_chains=2, n_iters=4, evidence=img, pins=pins,
+        backend="schedule", fused=True,
+    )
+    np.testing.assert_array_equal(np.asarray(lab_u), np.asarray(lab_f))
+
+
+def test_empty_pins_match_plain_run():
+    mrf = GridMRF(6, 6, 2)
+    prog = compile_graph(compile_ir.from_mrf(mrf))
+    img = jnp.zeros((6, 6), jnp.int32)
+    plain = prog.run(jax.random.key(0), n_chains=2, n_iters=4, evidence=img)
+    pinned = prog.run(
+        jax.random.key(0), n_chains=2, n_iters=4, evidence=img, pins={},
+    )
+    np.testing.assert_array_equal(np.asarray(plain), np.asarray(pinned))
+
+
+def test_full_parity_pin_rejected_at_canonicalization():
+    mrf = GridMRF(2, 2, 2)
+    even = {0: 0, 3: 1}  # sites (0,0) and (1,1): the whole even class
+    with pytest.raises(ValueError):
+        compile_ir.from_mrf(mrf, pinned=even)
+
+
+def test_runtime_evidence_validation():
+    bn = random_bayesnet(6, seed=0)
+    rt = compile_graph(canonicalize(bn, evidence_mode="runtime"))
+    with pytest.raises(ValueError):  # out of range
+        rt.run(jax.random.key(0), evidence={0: 99})
+    with pytest.raises(ValueError):  # clamping everything leaves no free RV
+        rt.run(
+            jax.random.key(0),
+            evidence={i: 0 for i in range(bn.n_nodes)},
+        )
+    with pytest.raises(ValueError):  # pins are MRF-speak
+        rt.run(jax.random.key(0), pins={0: 1})
+    baked = compile_graph(bn)
+    with pytest.raises(ValueError):  # baked-mode programs reject clamps
+        baked.run(jax.random.key(0), evidence={0: 1})
+    mrf_baked = compile_graph(compile_ir.from_mrf(GridMRF(4, 4, 2),
+                                                  pinned={0: 1}))
+    with pytest.raises(ValueError):  # and baked pins reject runtime pins
+        mrf_baked.run(
+            jax.random.key(0), evidence=jnp.zeros((4, 4), jnp.int32),
+            pins={1: 0},
+        )
+    with pytest.raises(ValueError):  # sharded path: clamps not supported
+        rt.run_sharded(jax.random.key(0), None, evidence={0: 1})
+
+
+def test_clamped_executable_cached_per_node_set():
+    bn = random_bayesnet(10, seed=4)
+    rt = compile_graph(canonicalize(bn, evidence_mode="runtime"))
+    kwargs = dict(n_chains=2, n_iters=4, burn_in=0, backend="schedule")
+    rt.run(jax.random.key(0), evidence={1: 0}, **kwargs)
+    n = rt.clamp_lowerings
+    rt.run(jax.random.key(1), evidence={1: 1}, **kwargs)  # same node set
+    assert rt.clamp_lowerings == n  # values changed, no new lowering
+    rt.run(jax.random.key(2), evidence={2: 0}, **kwargs)  # new node set
+    assert rt.clamp_lowerings == n + 1
+
+
+# ---------------------------------------------------------------------------
+# merge_small_colors pass
+# ---------------------------------------------------------------------------
+
+
+class _SplitLastClass:
+    """Test-only coloring splinterer: explode the last color class into
+    singletons (still a proper coloring — they were independent)."""
+
+    name = "split_last"
+
+    def __call__(self, ctx):
+        colors = np.asarray(ctx.colors).copy()
+        last = int(colors.max())
+        for i, v in enumerate(np.where(colors == last)[0]):
+            colors[v] = last + i
+        ctx.colors = colors
+
+
+def _split_pipeline(merge: bool):
+    from repro.compile.passes import (
+        DsaturPass, GreedyMapPass, MoralizePass, SchedulePass,
+    )
+
+    mid = [_SplitLastClass()] + ([MergeSmallColorsPass()] if merge else [])
+    return [MoralizePass(), DsaturPass(), *mid, GreedyMapPass(),
+            SchedulePass()]
+
+
+def test_merge_small_colors_fuses_splintered_rounds():
+    """The pass fuses tiny independent classes back into one round: a
+    splintered tail (here: the last DSATUR class exploded to singletons)
+    collapses back to the unsplintered round count, and the result is a
+    legal, loweable, bit-exact schedule."""
+    graph = compile_ir.from_bayesnet(bn_repository_replica("alarm"))
+    base = run_pipeline(graph)
+    inflated = run_pipeline(graph, passes=_split_pipeline(merge=False))
+    merged = run_pipeline(graph, passes=_split_pipeline(merge=True))
+    assert len(inflated.schedule.rounds) > len(base.schedule.rounds)
+    assert len(merged.schedule.rounds) == len(base.schedule.rounds)
+    assert merged.diagnostics["rounds_merged"] > 0
+    verify_schedule(graph, merged.schedule)  # raises on violation
+    # merged rounds execute through the backend, cross-checked bit-exact
+    prog = compile_graph(
+        graph, passes=_split_pipeline(merge=True), cross_check=True,
+    )
+    assert len(prog.schedule.rounds) == len(base.schedule.rounds)
+
+
+def test_merge_small_colors_is_identity_on_greedy_colorings():
+    """DSATUR is saturation-tight (every class conflicts with every earlier
+    one), so the pass must change nothing — on BNs or checkerboards."""
+    for graph in (
+        compile_ir.from_bayesnet(bn_repository_replica("hepar2")),
+        compile_ir.from_mrf(GridMRF(6, 6, 2)),
+    ):
+        base = run_pipeline(graph)
+        merged = run_pipeline(graph, passes=runtime_pipeline())
+        assert len(merged.schedule.rounds) == len(base.schedule.rounds)
+        assert merged.diagnostics["rounds_merged"] == 0
+        np.testing.assert_array_equal(base.colors, merged.colors)
+
+
+def test_merge_pass_determinism():
+    graph = compile_ir.from_bayesnet(bn_repository_replica("water"))
+    c1 = run_pipeline(graph, passes=_split_pipeline(merge=True))
+    c2 = run_pipeline(graph, passes=_split_pipeline(merge=True))
+    np.testing.assert_array_equal(c1.colors, c2.colors)
+    assert c1.schedule == c2.schedule
+
+
+def test_named_pipeline_registry():
+    assert [p.name for p in named_pipeline("runtime")] == [
+        "moralize", "dsatur", "merge_small_colors", "greedy_map", "schedule",
+    ]
+    with pytest.raises(ValueError):
+        named_pipeline("bogus")
+
+
+def test_illegal_merge_fails_at_lowering():
+    """A hypothetically buggy merge (adjacent classes fused into one round)
+    must be caught by the legality re-checks, not silently executed."""
+    from repro.compile.schedule import build_schedule
+    from repro.core.mapping import greedy_map
+
+    graph = compile_ir.from_bayesnet(random_bayesnet(8, seed=2))
+    assert graph.n_edges > 0
+    ctx = run_pipeline(graph)
+    bad = np.zeros_like(ctx.colors)  # all nodes one color: adjacent pairs
+    placement = greedy_map(ctx.adj, bad, (4, 4))
+    sched = build_schedule(graph, bad, placement)
+    with pytest.raises(AssertionError):
+        verify_schedule(graph, sched)
+    # and the pass itself never produces such a coloring
+    ctx2 = run_pipeline(graph, passes=runtime_pipeline())
+    verify_schedule(graph, ctx2.schedule)
+
+
+# ---------------------------------------------------------------------------
+# batching: bucket grouping, padding, vmap == single-query bits
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_key_grouping():
+    bn = random_bayesnet(8, seed=1)
+    graph = canonicalize(bn, evidence_mode="runtime")
+    q1 = Query(qid=0, model="m", evidence={1: 0, 3: 1})
+    q2 = Query(qid=1, model="m", evidence={3: 0, 1: 1})  # same node set
+    q3 = Query(qid=2, model="m", evidence={2: 0})  # different set
+    q4 = Query(qid=3, model="m", evidence={1: 0, 3: 1}, thin=2)
+    k1, k2 = bucket_key(q1, graph, "schedule"), bucket_key(q2, graph,
+                                                           "schedule")
+    assert k1 == k2
+    assert bucket_key(q3, graph, "schedule") != k1
+    assert bucket_key(q4, graph, "schedule") != k1  # thin is static
+    assert bucket_key(q1, graph, "eager") != k1  # backend is static
+
+
+def test_pad_size_ladder():
+    assert [pad_size(n) for n in (1, 2, 3, 5, 8, 9)] == [1, 2, 4, 8, 8, 16]
+    assert pad_size(33) == 33  # beyond the ladder: exact occupancy
+    with pytest.raises(ValueError):  # which the engine refuses to configure
+        Engine({}, EngineConfig(pad_sizes=(4,), max_batch=64))
+
+
+@pytest.mark.parametrize("backend", ["schedule", "eager"])
+def test_bn_microbatch_bit_exact_with_single_queries(backend):
+    """vmap lanes == standalone runs: batching never changes an answer."""
+    bn = random_bayesnet(9, max_parents=2, cards=(2, 3), seed=5)
+    graph = canonicalize(bn, evidence_mode="runtime")
+    prog = compile_graph(graph, pipeline="runtime")
+    queries = [
+        Query(qid=i, model="m", evidence={1: i % 2, 4: 0},
+              n_chains=3, n_iters=6, burn_in=1, seed=100 + i)
+        for i in range(3)
+    ]
+    key = bucket_key(queries[0], graph, backend)
+    results = execute_bucket(prog, key, queries)
+    assert len(results) == 3
+    for q, r in zip(queries, results):
+        marg, vals = prog.run(
+            jax.random.key(q.seed), n_chains=3, n_iters=6, burn_in=1,
+            evidence=q.evidence, backend=backend,
+        )
+        np.testing.assert_array_equal(r.final_state, np.asarray(vals))
+        np.testing.assert_array_equal(r.marginals, np.asarray(marg))
+
+
+def test_mrf_microbatch_bit_exact_with_single_queries():
+    mrf = GridMRF(6, 6, 3, theta=1.0, h=1.5)
+    graph = compile_ir.from_mrf(mrf)
+    prog = compile_graph(graph, pipeline="runtime")
+    rng = np.random.default_rng(0)
+    queries = [
+        Query(qid=i, model="m", evidence={int(i): 1},
+              image=rng.integers(0, 3, (6, 6)).astype(np.int32),
+              n_chains=2, n_iters=5, burn_in=0, seed=7 + i)
+        for i in range(2)
+    ]
+    key = bucket_key(queries[0], graph, "schedule")
+    results = execute_bucket(prog, key, queries)
+    for q, r in zip(queries, results):
+        lab = prog.run(
+            jax.random.key(q.seed), n_chains=2, n_iters=5,
+            evidence=jnp.asarray(q.image), pins=q.evidence,
+            backend="schedule",
+        )
+        np.testing.assert_array_equal(r.final_state, np.asarray(lab))
+
+
+# ---------------------------------------------------------------------------
+# engine: deterministic event loop
+# ---------------------------------------------------------------------------
+
+
+def _tiny_trace():
+    models, queries = zipf_trace(
+        14, quick=True, seed=11, mean_interarrival_s=2e-4
+    )
+    # trim the zoo to keep jit compiles cheap in unit tests
+    keep = {"survey", "cancer", "grid"}
+    models = {k: v for k, v in models.items() if k in keep}
+    queries = [q for q in queries if q.model in keep]
+    return models, queries
+
+
+def _engine_cfg(**kw):
+    return EngineConfig(pad_sizes=(4,), max_batch=4, **kw)
+
+
+def test_engine_answers_every_query_and_is_deterministic():
+    models, queries = _tiny_trace()
+    eng1 = Engine(models, _engine_cfg())
+    eng1.submit(queries)
+    res1 = eng1.run()
+    assert sorted(res1) == [q.qid for q in sorted(queries,
+                                                  key=lambda q: q.qid)]
+    s1 = eng1.metrics.summary()
+    assert s1["n_queries"] == len(queries)
+    assert s1["latency_p95_ms"] >= s1["latency_p50_ms"] > 0
+
+    # replay from a cold program cache: every simulated metric (and every
+    # posterior bit) must reproduce exactly
+    clear_program_cache()
+    models2, queries2 = _tiny_trace()
+    eng2 = Engine(models2, _engine_cfg())
+    eng2.submit(queries2)
+    res2 = eng2.run()
+    s2 = eng2.metrics.summary()
+    for k in s1:
+        if k != "wall_s":  # sim metrics replay exactly; wall time never
+            assert s1[k] == s2[k], k
+    for qid in res1:
+        np.testing.assert_array_equal(
+            res1[qid].final_state, res2[qid].final_state
+        )
+        assert res1[qid].finish_s == res2[qid].finish_s
+
+
+def test_engine_eager_escape_hatch_same_bits():
+    """backend='eager' serves the same posteriors the schedule path does
+    (the PR-2 bit-exactness carried into the runtime)."""
+    res_s = None
+    for backend in ("schedule", "eager"):
+        m, qs = _tiny_trace()
+        eng = Engine(m, _engine_cfg(backend=backend))
+        eng.submit(qs)
+        res = eng.run()
+        if res_s is None:
+            res_s = res
+        else:
+            for qid in res_s:
+                np.testing.assert_array_equal(
+                    res_s[qid].final_state, res[qid].final_state
+                )
+
+
+def test_engine_rejects_bad_queries():
+    models, _ = _tiny_trace()
+    eng = Engine(models, _engine_cfg())
+    with pytest.raises(KeyError):
+        eng.submit([Query(qid=0, model="nope")])
+    with pytest.raises(ValueError):  # MRF query without an image
+        eng.submit([Query(qid=1, model="grid")])
+    with pytest.raises(ValueError):
+        Engine(models, _engine_cfg(backend="pallas"))
+
+
+def test_engine_batches_and_hits_cache():
+    """A bursty single-model stream batches up and compiles once."""
+    bn = bn_repository_replica("survey")
+    eng = Engine({"survey": bn}, _engine_cfg(window_s=1.0))
+    queries = [
+        Query(qid=i, model="survey", evidence={0: i % 2},
+              n_chains=2, n_iters=4, burn_in=0, seed=i,
+              arrival_s=1e-6 * i)
+        for i in range(8)
+    ]
+    eng.submit(queries)
+    res = eng.run()
+    assert len(res) == 8
+    s = eng.metrics.summary()
+    assert s["n_batches"] == 2  # 8 queries / max_batch 4
+    assert s["mean_batch"] == 4.0
+    assert s["cache_misses"] == 1 and s["cache_hits"] >= 1
+    # one clamp-set lowering serves all batches of the same pattern
+    assert s["clamp_lowerings"] == 1
