@@ -1,4 +1,5 @@
-"""Serving-runtime benchmark: batched engine vs one-query-at-a-time.
+"""Serving-runtime benchmark: batched engine vs one-query-at-a-time, plus
+the multi-worker executor gates.
 
 Replays the synthetic Zipf-over-models trace twice through two serving
 disciplines over the same compiled-program cache:
@@ -12,8 +13,20 @@ disciplines over the same compiled-program cache:
 
 Both are measured over a *second* pass (first pass pays jit compiles for
 both disciplines; serving steady-state is the regime that matters), and the
-acceptance gates are asserted here: program-cache hit rate >= 0.9 on the
-Zipf trace and batched queries/sec above the serial baseline.
+acceptance gates are asserted here:
+
+  * program-cache hit rate >= 0.9 on the Zipf trace, batched qps above the
+    serial baseline;
+  * **workers** — 4-worker simulated qps strictly above 1-worker on the
+    same trace (the executor overlap gate; simulated time, so the
+    comparison is exact and machine-independent);
+  * **slicing** — sliced long-query serving bit-exact with uninterrupted
+    serving, asserted over every query (states and marginals);
+  * **calibration** — after measured-time warmup, service predictions
+    within 25% median relative error of the real dispatch walls;
+  * **bursty backpressure** — under the on/off saturating trace, bounded
+    queues never exceed the configured limit, the shed rate is reported,
+    and two same-seed runs produce identical simulated metrics.
 
 Writes one JSON record to ``benchmarks/results/runtime/`` for
 ``launch/report.py``.
@@ -36,7 +49,14 @@ if __package__ in (None, ""):  # `python benchmarks/bench_runtime.py`
 
 from benchmarks.common import csv_row
 from repro.compile import cache_stats, clear_program_cache, compile_graph
-from repro.runtime import Engine, EngineConfig, zipf_trace
+from repro.runtime import (
+    AdmissionConfig,
+    Engine,
+    EngineConfig,
+    Query,
+    bursty_trace,
+    zipf_trace,
+)
 
 RESULTS_DIR = os.path.join(
     os.path.dirname(os.path.abspath(__file__)), "results", "runtime"
@@ -90,6 +110,141 @@ def _run_serial(models, queries, backend: str):
     return time.perf_counter() - t0
 
 
+# ---------------------------------------------------------------------------
+# executor gates (multi-worker, slicing, calibration, bursty backpressure)
+# ---------------------------------------------------------------------------
+
+# determinism comparisons must skip the two wall-derived keys
+_WALL_KEYS = ("wall_s", "calib_median_err")
+
+
+def _gate_trace(quick: bool, seed: int = 5):
+    """A small, fast zoo for the executor gates (they run several full
+    engine passes; the zipf discipline comparison above covers scale)."""
+    models, queries = zipf_trace(
+        60 if quick else 80, quick=True, seed=seed, mean_interarrival_s=5e-5,
+    )
+    return models, queries
+
+
+def _engine_pass(models, queries, **cfg):
+    # single-pad ladder: the gates compare sim-time/bit properties, and
+    # every extra (signature, pad) pair is a fresh XLA compile on the
+    # gate's critical path
+    eng = Engine(models, EngineConfig(
+        pad_sizes=(8,), max_batch=8, **cfg,
+    ))
+    eng.submit(list(queries))
+    results = eng.run()
+    return eng, results
+
+
+def gate_workers(quick: bool) -> dict:
+    """4-worker simulated qps strictly above 1-worker on the same trace."""
+    models, queries = _gate_trace(quick)
+    e1, r1 = _engine_pass(models, queries, n_workers=1)
+    e4, r4 = _engine_pass(models, queries, n_workers=4)
+    qps1 = e1.metrics.summary()["throughput_qps"]
+    qps4 = e4.metrics.summary()["throughput_qps"]
+    assert qps4 > qps1, (
+        "4-worker executor no faster than 1 worker (simulated)", qps4, qps1,
+    )
+    # the pool changes the clock, never the posterior
+    for qid in r1:
+        assert (r1[qid].final_state == r4[qid].final_state).all()
+    return {"workers_qps_1": qps1, "workers_qps_4": qps4,
+            "workers_speedup": qps4 / qps1}
+
+
+def gate_slicing(quick: bool) -> dict:
+    """Sliced long-query serving == uninterrupted serving, bit for bit,
+    asserted for every query (not sampled)."""
+    models, queries = _gate_trace(quick, seed=6)
+    e_whole, r_whole = _engine_pass(models, queries)
+    e_slice, r_slice = _engine_pass(models, queries, slice_iters=5)
+    assert sorted(r_whole) == sorted(r_slice)
+    for qid in r_whole:
+        assert (r_whole[qid].final_state == r_slice[qid].final_state).all()
+        if r_whole[qid].marginals is not None:
+            assert (r_whole[qid].marginals == r_slice[qid].marginals).all()
+    n_whole = e_whole.metrics.summary()["n_batches"]
+    n_slice = e_slice.metrics.summary()["n_batches"]
+    assert n_slice > n_whole  # slices really interleaved
+    return {"slicing_batches_whole": n_whole, "slicing_batches": n_slice}
+
+
+def gate_calibration(quick: bool) -> dict:
+    """Measured-time calibration: predictions within 25% median relative
+    error of the real dispatch walls, after warmup (single-pad ladder so
+    every dispatch reuses the warmed executable; chain/iter budgets sized
+    so one dispatch takes tens of milliseconds — short dispatches drown
+    the measurement in host noise and the gate would test the OS
+    scheduler, not the calibrator)."""
+    from repro.core.graphs import bn_repository_replica
+
+    rng_models = {n: bn_repository_replica(n) for n in ("survey", "cancer")}
+    queries = [
+        Query(
+            qid=i, model=("survey", "cancer")[i % 2], evidence={0: i % 2},
+            n_chains=8, n_iters=48, burn_in=8, seed=100 + i,
+            arrival_s=1e-4 * i,
+        )
+        for i in range(32 if quick else 48)
+    ]
+    eng = Engine(rng_models, EngineConfig(pad_sizes=(8,), max_batch=8))
+    eng.submit(queries)
+    eng.calibrate(repeats=5)
+    eng.run()
+    s = eng.metrics.summary()
+    assert s["calibrated_batches"] == s["n_batches"], (
+        "some dispatches fell back to the line model after warmup", s,
+    )
+    assert s["calib_median_err"] is not None
+    assert s["calib_median_err"] <= 0.25, (
+        "calibrated service predictions off by more than 25% median",
+        s["calib_median_err"],
+    )
+    return {"calib_median_err": s["calib_median_err"],
+            "calibrated_batches": s["calibrated_batches"]}
+
+
+def gate_bursty(quick: bool) -> dict:
+    """Bursty saturation: bounded queues hold their limit, sheds are
+    reported, and the event loop replays deterministically."""
+    queue_limit = 8
+    cfg = dict(
+        admission=AdmissionConfig(
+            rate_qps=3000.0, burst=8, queue_limit=queue_limit,
+            max_defer_s=0.01,
+        ),
+    )
+    n = 60 if quick else 100
+
+    def one_pass():
+        clear_program_cache()  # replay equality includes the cache counters
+        models, queries = bursty_trace(n, quick=True, seed=8)
+        eng, results = _engine_pass(models, queries, **cfg)
+        return eng.metrics.summary(), results, len(queries)
+
+    s1, r1, n_submitted = one_pass()
+    assert s1["max_queue_depth"] <= queue_limit, (
+        "bounded queue exceeded its limit", s1["max_queue_depth"],
+    )
+    assert s1["sheds"] + s1["defers"] > 0, (
+        "the bursty trace never saturated admission; gate is vacuous", s1,
+    )
+    assert s1["n_queries"] + s1["sheds"] == n_submitted
+    s2, r2, _ = one_pass()
+    for k in s1:
+        if k not in _WALL_KEYS:
+            assert s1[k] == s2[k], ("bursty replay diverged", k, s1[k], s2[k])
+    for qid in r1:
+        assert (r1[qid].final_state == r2[qid].final_state).all()
+    return {"bursty_max_queue_depth": s1["max_queue_depth"],
+            "bursty_shed_rate": s1["shed_rate"],
+            "bursty_sheds": s1["sheds"], "bursty_defers": s1["defers"]}
+
+
 def run(quick: bool = False, backend: str = "schedule"):
     rows = []
     os.makedirs(RESULTS_DIR, exist_ok=True)
@@ -105,13 +260,15 @@ def run(quick: bool = False, backend: str = "schedule"):
     clear_program_cache()
     cold_engine, _ = _run_engine(models, queries, backend, quick)
     serial_cold_s = _run_serial(models, queries, backend)
+    print("[bench_runtime] cold pass done", flush=True)
     batched_wall, serial_wall = float("inf"), float("inf")
     engine = None
-    for _ in range(3):
+    for i in range(3):
         eng, w = _run_engine(models, queries, backend, quick)
         if w < batched_wall:
             batched_wall, engine = w, eng
         serial_wall = min(serial_wall, _run_serial(models, queries, backend))
+        print(f"[bench_runtime] steady-state pass {i + 1}/3 done", flush=True)
 
     s = engine.metrics.summary()
     cold_hit_rate = cold_engine.metrics.summary()["cache_hit_rate"]
@@ -163,6 +320,27 @@ def run(quick: bool = False, backend: str = "schedule"):
         f"mean_batch={s['mean_batch']:.2f};"
         f"p95_sim_ms={s['latency_p95_ms']:.2f};"
         f"recompiles={s['recompiles']}",
+    ))
+
+    # executor gates (each asserts its acceptance criterion internally)
+    gates = {}
+    for gate in (gate_workers, gate_slicing, gate_calibration, gate_bursty):
+        clear_program_cache()
+        t0 = time.perf_counter()
+        gates.update(gate(quick))
+        print(f"[bench_runtime] {gate.__name__} ok "
+              f"({time.perf_counter() - t0:.1f}s)", flush=True)
+    rec.update(gates)
+    with open(os.path.join(RESULTS_DIR, "zipf.json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    rows.append(csv_row(
+        "runtime_executor", gates["workers_speedup"],
+        f"workers_speedup={gates['workers_speedup']:.2f};"
+        f"slicing_batches={gates['slicing_batches']};"
+        f"calib_median_err={gates['calib_median_err']:.3f};"
+        f"bursty_maxq={gates['bursty_max_queue_depth']};"
+        f"bursty_shed_rate={gates['bursty_shed_rate']:.3f};"
+        f"bursty_defers={gates['bursty_defers']}",
     ))
     return rows
 

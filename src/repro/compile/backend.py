@@ -179,37 +179,49 @@ def pin_arrays(
 
 def bn_rounds_core(
     cbn, round_groups, key, *, n_chains, n_iters, burn_in, sampler, thin=1,
-    clamp_vals=None, clamp_mask=None,
+    clamp_vals=None, clamp_mask=None, carry=None, return_state=False,
 ):
     """Un-jitted BN round sweep: init (with optional runtime clamps) + the
     shared `gibbs_run_loop`.  `run_bn_schedule` jits it; the serving batcher
-    vmaps it over per-query (key, clamp_vals) with shared static groups."""
-    vals, key = bnet.init_chain_values(
-        cbn, key, n_chains, clamp_vals=clamp_vals, clamp_mask=clamp_mask
-    )
+    vmaps it over per-query (key, clamp_vals) with shared static groups.
+
+    A `carry` (`bayesnet.BNChainState`) skips the init and resumes the
+    chain exactly — the clamped values already live in the carried state and
+    clamped nodes are absent from the (same) groups, so slicing a clamped
+    run needs nothing beyond the state itself."""
+    if carry is None:
+        vals, key = bnet.init_chain_values(
+            cbn, key, n_chains, clamp_vals=clamp_vals, clamp_mask=clamp_mask
+        )
+    else:
+        vals = None
     return bnet.gibbs_run_loop(
-        cbn, round_groups, vals, key, n_iters, burn_in, sampler, thin
+        cbn, round_groups, vals, key, n_iters, burn_in, sampler, thin,
+        carry=carry, return_state=return_state,
     )
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("n_chains", "n_iters", "burn_in", "sampler", "thin"),
+    static_argnames=(
+        "n_chains", "n_iters", "burn_in", "sampler", "thin", "return_state",
+    ),
 )
 def _run_bn_rounds(
-    cbn, round_groups, key, clamp_vals, clamp_mask, *,
-    n_chains, n_iters, burn_in, sampler, thin,
+    cbn, round_groups, key, clamp_vals, clamp_mask, carry, *,
+    n_chains, n_iters, burn_in, sampler, thin, return_state,
 ):
     return bn_rounds_core(
         cbn, round_groups, key, n_chains=n_chains, n_iters=n_iters,
         burn_in=burn_in, sampler=sampler, thin=thin,
         clamp_vals=clamp_vals, clamp_mask=clamp_mask,
+        carry=carry, return_state=return_state,
     )
 
 
 def run_bn_schedule(
     ex: BNScheduleExec,
-    key: jax.Array,
+    key: jax.Array | None,
     *,
     clamp_vals: jax.Array | None = None,
     clamp_mask: jax.Array | None = None,
@@ -229,23 +241,25 @@ def run_bn_schedule(
 def bn_run_clamped(
     cbn,
     round_groups,
-    clamp_vals: jax.Array,
-    clamp_mask: jax.Array,
-    key: jax.Array,
+    clamp_vals: jax.Array | None,
+    clamp_mask: jax.Array | None,
+    key: jax.Array | None,
     *,
     n_chains: int = 32,
     n_iters: int = 200,
     burn_in: int = 50,
     sampler: str = "lut_ky",
     thin: int = 1,
+    carry=None,
+    return_state: bool = False,
 ):
     """Execute an already-specialized clamped grouping (from
     `CompiledProgram.clamped_executable`, either backend's) with per-query
     evidence values; same contract as `bayesnet.run_gibbs`."""
     return _run_bn_rounds(
-        cbn, round_groups, key, clamp_vals, clamp_mask,
+        cbn, round_groups, key, clamp_vals, clamp_mask, carry,
         n_chains=n_chains, n_iters=n_iters, burn_in=burn_in, sampler=sampler,
-        thin=thin,
+        thin=thin, return_state=return_state,
     )
 
 
@@ -256,16 +270,26 @@ def bn_run_clamped(
 
 def mrf_rounds_core(
     mrf, parities, evidence, key, *, n_chains, n_iters, sampler, fused,
-    interpret, pin_mask=None, pin_vals=None,
+    interpret, pin_mask=None, pin_vals=None, carry=None, return_state=False,
 ):
     """Un-jitted schedule-ordered MRF sweep (the batcher vmaps this over
     per-query evidence images and pin masks — pins are runtime arrays, so
     one trace serves every pin pattern).  The fused Pallas kernel computes
     the whole parity update and pinned sites are restored afterwards, which
     matches the unfused path's masked `where` bit for bit because pinned
-    sites always hold their pinned value going in."""
+    sites always hold their pinned value going in.
+
+    A `carry` (`mrf.MRFChainState`) skips the init and resumes the chain
+    exactly — sliced runs are bit-exact with uninterrupted ones on the
+    fused path too, because the per-iteration key-split structure is the
+    carry itself."""
     exp_table, exp_spec = build_exp_weight_lut()
-    labels, key = mrf_mod.init_labels(mrf, key, n_chains, pin_mask, pin_vals)
+    if carry is None:
+        labels, key = mrf_mod.init_labels(
+            mrf, key, n_chains, pin_mask, pin_vals
+        )
+    else:
+        labels, key = carry.labels, carry.key
 
     def body(t, carry):
         labels, key = carry
@@ -285,7 +309,9 @@ def mrf_rounds_core(
                 )
         return labels, ks[0]
 
-    labels, _ = jax.lax.fori_loop(0, n_iters, body, (labels, key))
+    labels, key = jax.lax.fori_loop(0, n_iters, body, (labels, key))
+    if return_state:
+        return labels, mrf_mod.MRFChainState(labels=labels, key=key)
     return labels
 
 
@@ -293,24 +319,25 @@ def mrf_rounds_core(
     jax.jit,
     static_argnames=(
         "mrf", "parities", "n_chains", "n_iters", "sampler", "fused",
-        "interpret",
+        "interpret", "return_state",
     ),
 )
 def _run_mrf_rounds(
-    mrf, parities, evidence, key, pin_mask, pin_vals, *,
-    n_chains, n_iters, sampler, fused, interpret,
+    mrf, parities, evidence, key, pin_mask, pin_vals, carry, *,
+    n_chains, n_iters, sampler, fused, interpret, return_state,
 ):
     return mrf_rounds_core(
         mrf, parities, evidence, key, n_chains=n_chains, n_iters=n_iters,
         sampler=sampler, fused=fused, interpret=interpret,
         pin_mask=pin_mask, pin_vals=pin_vals,
+        carry=carry, return_state=return_state,
     )
 
 
 def run_mrf_schedule(
     ex: MRFScheduleExec,
     evidence: jax.Array,
-    key: jax.Array,
+    key: jax.Array | None,
     *,
     n_chains: int = 32,
     n_iters: int = 200,
@@ -318,6 +345,8 @@ def run_mrf_schedule(
     fused: bool = False,
     pin_mask: jax.Array | None = None,
     pin_vals: jax.Array | None = None,
+    carry=None,
+    return_state: bool = False,
 ):
     """Execute a lowered MRF schedule; same contract as `mrf.run_mrf_gibbs`
     (returns final labels (B, H, W)).
@@ -328,7 +357,8 @@ def run_mrf_schedule(
     path stays bit-identical to the eager engine.
 
     Pins come from either the lowering (baked into the IR) or the caller
-    (runtime queries) — `program.run()` guarantees they never both apply."""
+    (runtime queries) — `program.run()` guarantees they never both apply.
+    `carry`/`return_state` slice the run: see `mrf_rounds_core`."""
     if fused and sampler != "lut_ky":
         raise ValueError(
             f"fused schedule rounds implement the lut_ky datapath only, "
@@ -338,9 +368,9 @@ def run_mrf_schedule(
         pin_mask, pin_vals = pin_arrays(ex.mrf, ex.pinned)
     interpret = jax.default_backend() != "tpu"
     return _run_mrf_rounds(
-        ex.mrf, ex.parities, evidence, key, pin_mask, pin_vals,
+        ex.mrf, ex.parities, evidence, key, pin_mask, pin_vals, carry,
         n_chains=n_chains, n_iters=n_iters, sampler=sampler, fused=fused,
-        interpret=interpret,
+        interpret=interpret, return_state=return_state,
     )
 
 
@@ -417,7 +447,8 @@ def cross_check_clamped(program, ex: BNScheduleExec) -> None:
         sampler="lut_ky", thin=1,
     )
     marg_e, vals_e = _run_bn_rounds(
-        program.cbn, eager_groups, key, clamp_vals, clamp_mask, **kwargs
+        program.cbn, eager_groups, key, clamp_vals, clamp_mask, None,
+        return_state=False, **kwargs,
     )
     marg_s, vals_s = run_bn_schedule(
         ex, key, clamp_vals=clamp_vals, clamp_mask=clamp_mask, **kwargs

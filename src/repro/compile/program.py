@@ -105,6 +105,12 @@ class CompiledProgram:
         key = (clamp_nodes, backend)
         groups = self._clamp_execs.get(key)
         if groups is None:
+            if len(set(clamp_nodes)) >= self.ir.n_nodes:
+                # same ValueError on both backends (the schedule lowering
+                # would raise its own ScheduleLoweringError otherwise)
+                raise ValueError(
+                    "runtime evidence clamps every free RV; nothing to sample"
+                )
             if backend == "schedule":
                 ex = backend_mod.lower_schedule(self, clamp_nodes)
                 backend_mod.cross_check_clamped(self, ex)
@@ -148,7 +154,7 @@ class CompiledProgram:
 
     def run(
         self,
-        key: jax.Array,
+        key: jax.Array | None,
         *,
         n_chains: int = 32,
         n_iters: int = 200,
@@ -157,8 +163,10 @@ class CompiledProgram:
         sampler: str = "lut_ky",
         evidence=None,
         pins=None,
-        backend: str = "eager",
+        backend: str = "schedule",
         fused: bool = False,
+        carry_state=None,
+        return_state: bool = False,
     ):
         """Single-device jitted execution.
 
@@ -173,18 +181,35 @@ class CompiledProgram:
         dropped).  `pins={site: label}` (or a ((H, W) bool, (H, W) int32)
         pair) clamps pixels per query on a runtime-mode MRF program.
 
-        `backend` picks the execution path: "eager" delegates to the eager
-        Gibbs engines; "schedule" executes the compiled `Schedule`'s rounds
-        directly (bit-exact — cross-checked at first lowering).  `fused`
-        additionally routes MRF schedule rounds through the Pallas kernel
-        (lut_ky only)."""
+        `backend` picks the execution path: "schedule" (the default)
+        executes the compiled `Schedule`'s rounds directly — bit-exact with
+        "eager", the eager Gibbs engines, cross-checked at first lowering;
+        "eager" is the escape hatch.  `fused` additionally routes MRF
+        schedule rounds through the Pallas kernel (lut_ky only).
+
+        `return_state=True` additionally returns the chain state
+        (`bayesnet.BNChainState` / `mrf.MRFChainState`) as the last element;
+        passing it back via `carry_state=` resumes the run for `n_iters`
+        *more* sweeps (then `key` is ignored and may be None).  A run sliced
+        at any boundaries is bit-exact with the uninterrupted run, provided
+        each slice repeats the same static arguments (burn_in, thin,
+        sampler, backend, evidence/pins)."""
         if backend not in ("eager", "schedule"):
             raise ValueError(f"unknown backend {backend!r}")
         if fused and backend != "schedule":
             raise ValueError("fused execution requires backend='schedule'")
         if thin < 1:
             raise ValueError(f"thin must be >= 1, got {thin}")
+        if carry_state is None and key is None:
+            raise ValueError("a fresh run (carry_state=None) needs a PRNG key")
         if self.kind == "bn":
+            if carry_state is not None and not isinstance(
+                carry_state, bnet.BNChainState
+            ):
+                raise TypeError(
+                    "BN programs resume from a bayesnet.BNChainState, got "
+                    f"{type(carry_state).__name__}"
+                )
             if pins is not None:
                 raise ValueError(
                     "pins are an MRF concept; BN observations go through "
@@ -200,16 +225,25 @@ class CompiledProgram:
                     self.cbn, groups, ev_vals, ev_mask, key,
                     n_chains=n_chains, n_iters=n_iters, burn_in=burn_in,
                     sampler=sampler, thin=thin,
+                    carry=carry_state, return_state=return_state,
                 )
             if backend == "schedule":
                 return backend_mod.run_bn_schedule(
                     self.schedule_executable(), key, n_chains=n_chains,
                     n_iters=n_iters, burn_in=burn_in, sampler=sampler,
-                    thin=thin,
+                    thin=thin, carry=carry_state, return_state=return_state,
                 )
             return bnet.run_gibbs(
                 self.cbn, key, n_chains=n_chains, n_iters=n_iters,
                 burn_in=burn_in, sampler=sampler, thin=thin,
+                carry=carry_state, return_state=return_state,
+            )
+        if carry_state is not None and not isinstance(
+            carry_state, mrf_mod.MRFChainState
+        ):
+            raise TypeError(
+                "MRF programs resume from an mrf.MRFChainState, got "
+                f"{type(carry_state).__name__}"
             )
         if evidence is None:
             raise ValueError("MRF programs take the evidence image at run()")
@@ -242,10 +276,12 @@ class CompiledProgram:
                 self.schedule_executable(), evidence, key, n_chains=n_chains,
                 n_iters=n_iters, sampler=sampler, fused=fused,
                 pin_mask=pin_mask, pin_vals=pin_vals,
+                carry=carry_state, return_state=return_state,
             )
         return mrf_mod.run_mrf_gibbs(
             self.mrf, evidence, key, n_chains=n_chains, n_iters=n_iters,
             sampler=sampler, pin_mask=pin_mask, pin_vals=pin_vals,
+            carry=carry_state, return_state=return_state,
         )
 
     def run_sharded(
@@ -258,13 +294,14 @@ class CompiledProgram:
         burn_in: int | None = None,
         sampler: str = "lut_ky",
         evidence: jax.Array | None = None,
-        backend: str = "eager",
+        backend: str = "schedule",
         **axes,
     ):
         """shard_map execution across a device mesh; node ownership follows
         this program's placement (see distributed.run_program_sharded).
-        With backend="schedule", rounds come from this program's schedule and
-        each round's comm op is routed onto its named collective."""
+        With backend="schedule" (the default, like `run()`), rounds come
+        from this program's schedule and each round's comm op is routed onto
+        its named collective; backend="eager" is the escape hatch."""
         if self.kind == "bn" and evidence is not None:
             raise ValueError(
                 "runtime evidence clamps are a single-device serving path; "

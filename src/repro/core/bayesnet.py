@@ -205,6 +205,22 @@ def compile_bayesnet(
     )
 
 
+@dataclasses.dataclass
+class BNChainState:
+    """Everything a BN Gibbs run needs to resume exactly where it stopped.
+
+    Carrying (vals, key, hist, t) across `gibbs_run_loop` calls makes a
+    sliced run bit-identical to an uninterrupted one: the key is split once
+    per sweep in sequence, the marginal histogram keeps accumulating, and
+    `t` (global sweeps completed) keeps the burn-in/thinning gate aligned
+    with where the chain actually is, not where the current slice started."""
+
+    vals: jax.Array  # (B, n) int32 current chain states
+    key: jax.Array  # PRNG key as of the next sweep
+    hist: jax.Array  # (n, V) int32 marginal histogram so far
+    t: jax.Array  # () int32 sweeps completed
+
+
 jax.tree_util.register_dataclass(
     ColorGroup, ["nodes", "cards", "base", "stride", "scope_var", "is_self"], []
 )
@@ -213,6 +229,7 @@ jax.tree_util.register_dataclass(
     ["log_flat", "groups", "cards", "init_vals", "free_mask", "exp_table"],
     ["max_card", "n_nodes", "colors", "exp_spec", "name"],
 )
+jax.tree_util.register_dataclass(BNChainState, ["vals", "key", "hist", "t"], [])
 
 
 def group_log_conditionals(
@@ -298,12 +315,14 @@ def init_chain_values(
 def gibbs_run_loop(
     cbn: CompiledBayesNet,
     groups: list[ColorGroup],
-    vals: jax.Array,
-    key: jax.Array,
+    vals: jax.Array | None,
+    key: jax.Array | None,
     n_iters: int,
     burn_in: int,
     sampler: str,
     thin: int = 1,
+    carry: BNChainState | None = None,
+    return_state: bool = False,
 ):
     """The iteration loop shared by the eager engine (`groups=cbn.groups`)
     and the schedule-direct backend (`groups` built from `Schedule.rounds`):
@@ -312,49 +331,72 @@ def gibbs_run_loop(
     `thin` keeps every thin-th post-burn-in sweep in the marginal histogram
     (streaming accumulation — no sample matrix is ever materialized); the
     chain itself always advances every sweep, so thin=1 reproduces today's
-    bits exactly and any thin leaves the final state unchanged."""
-    hist0 = jnp.zeros((cbn.n_nodes, cbn.max_card), jnp.int32)
+    bits exactly and any thin leaves the final state unchanged.
 
-    def body(t, carry):
-        vals, key, hist = carry
-        key, sub = jax.random.split(key)
-        vals = gibbs_sweep(cbn, vals, sub, sampler, groups)
+    `carry` resumes a previous call's `BNChainState` (then `vals`/`key` are
+    ignored and may be None) and `n_iters` counts *additional* sweeps; the
+    burn-in/thinning gate tests the carried global sweep count, so a run
+    sliced at any boundaries — with the same static burn_in/thin/groups per
+    slice — is bit-exact with the uninterrupted run.  `return_state=True`
+    appends the state needed to continue."""
+    if carry is None:
+        carry = BNChainState(
+            vals=vals,
+            key=key,
+            hist=jnp.zeros((cbn.n_nodes, cbn.max_card), jnp.int32),
+            t=jnp.zeros((), jnp.int32),
+        )
+
+    def body(_, st):
+        key, sub = jax.random.split(st.key)
+        vals = gibbs_sweep(cbn, st.vals, sub, sampler, groups)
         onehot = (
             vals[..., None] == jnp.arange(cbn.max_card, dtype=jnp.int32)
         ).astype(jnp.int32)
-        keep = (t >= burn_in) & ((t - burn_in) % thin == 0)
-        hist = hist + jnp.where(keep, onehot.sum(0), 0)
-        return vals, key, hist
+        keep = (st.t >= burn_in) & ((st.t - burn_in) % thin == 0)
+        hist = st.hist + jnp.where(keep, onehot.sum(0), 0)
+        return BNChainState(vals=vals, key=key, hist=hist, t=st.t + 1)
 
-    vals, _, hist = jax.lax.fori_loop(0, n_iters, body, (vals, key, hist0))
+    carry = jax.lax.fori_loop(0, n_iters, body, carry)
     card_mask = (
         jnp.arange(cbn.max_card, dtype=jnp.int32)[None] < cbn.cards[:, None]
     )
-    denom = jnp.maximum(hist.sum(-1, keepdims=True), 1)
-    marginals = jnp.where(card_mask, hist / denom, 0.0)
-    return marginals, vals
+    denom = jnp.maximum(carry.hist.sum(-1, keepdims=True), 1)
+    marginals = jnp.where(card_mask, carry.hist / denom, 0.0)
+    if return_state:
+        return marginals, carry.vals, carry
+    return marginals, carry.vals
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("n_chains", "n_iters", "burn_in", "sampler", "thin"),
+    static_argnames=(
+        "n_chains", "n_iters", "burn_in", "sampler", "thin", "return_state",
+    ),
 )
 def run_gibbs(
     cbn: CompiledBayesNet,
-    key: jax.Array,
+    key: jax.Array | None,
     n_chains: int = 32,
     n_iters: int = 200,
     burn_in: int = 50,
     sampler: str = "lut_ky",
     thin: int = 1,
+    carry: BNChainState | None = None,
+    return_state: bool = False,
 ):
     """Multi-chain chromatic Gibbs; returns (marginals (n, V), final vals).
 
     Chains are the data-parallel axis (AIA's MaxChain loop, Alg. 1 line 1);
     the single-marginal histogram accumulates over all chains and kept
     iterations, giving every node's marginal at no extra cost (the paper's
-    "compute all single marginals without overhead" observation)."""
-    vals, key = init_chain_values(cbn, key, n_chains)
+    "compute all single marginals without overhead" observation).
+
+    `carry`/`return_state` slice the run: see `gibbs_run_loop`."""
+    vals = None
+    if carry is None:
+        vals, key = init_chain_values(cbn, key, n_chains)
     return gibbs_run_loop(
-        cbn, cbn.groups, vals, key, n_iters, burn_in, sampler, thin
+        cbn, cbn.groups, vals, key, n_iters, burn_in, sampler, thin,
+        carry=carry, return_state=return_state,
     )

@@ -14,6 +14,7 @@ Art image tasks).  The per-site pipeline is the same C2->C1 chain:
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
@@ -103,6 +104,20 @@ def half_step(
     return jnp.where(mask, new, labels)
 
 
+@dataclasses.dataclass
+class MRFChainState:
+    """Resume point for a grid-MRF Gibbs run: carrying (labels, key) across
+    `mrf_gibbs_loop` calls makes a sliced run bit-identical to an
+    uninterrupted one (the key is split once per iteration in sequence and
+    there is no burn-in/thinning state to realign)."""
+
+    labels: jax.Array  # (B, H, W) int32 current chain states
+    key: jax.Array  # PRNG key as of the next iteration
+
+
+jax.tree_util.register_dataclass(MRFChainState, ["labels", "key"], [])
+
+
 def init_labels(
     mrf: GridMRF,
     key: jax.Array,
@@ -125,18 +140,28 @@ def init_labels(
 def mrf_gibbs_loop(
     mrf: GridMRF,
     evidence: jax.Array,
-    key: jax.Array,
+    key: jax.Array | None,
     n_chains: int,
     n_iters: int,
     sampler: str,
     pin_mask: jax.Array | None = None,
     pin_vals: jax.Array | None = None,
+    carry: MRFChainState | None = None,
+    return_state: bool = False,
 ):
     """The eager iteration body shared by `run_mrf_gibbs` and the batched
     serving path (which vmaps it over queries): n_iters x (even half-step,
-    odd half-step), pins held fixed throughout."""
+    odd half-step), pins held fixed throughout.
+
+    `carry` resumes a previous call's `MRFChainState` (then `key` is ignored
+    and may be None) and `n_iters` counts *additional* iterations — sliced
+    runs are bit-exact with uninterrupted ones.  `return_state=True` returns
+    (labels, state) instead of labels alone."""
     exp_table, exp_spec = build_exp_weight_lut()
-    labels, key = init_labels(mrf, key, n_chains, pin_mask, pin_vals)
+    if carry is None:
+        labels, key = init_labels(mrf, key, n_chains, pin_mask, pin_vals)
+    else:
+        labels, key = carry.labels, carry.key
 
     def body(t, carry):
         labels, key = carry
@@ -151,30 +176,37 @@ def mrf_gibbs_loop(
         )
         return labels, key
 
-    labels, _ = jax.lax.fori_loop(0, n_iters, body, (labels, key))
+    labels, key = jax.lax.fori_loop(0, n_iters, body, (labels, key))
+    if return_state:
+        return labels, MRFChainState(labels=labels, key=key)
     return labels
 
 
 @functools.partial(
-    jax.jit, static_argnames=("mrf", "n_chains", "n_iters", "sampler")
+    jax.jit,
+    static_argnames=("mrf", "n_chains", "n_iters", "sampler", "return_state"),
 )
 def run_mrf_gibbs(
     mrf: GridMRF,
     evidence: jax.Array,
-    key: jax.Array,
+    key: jax.Array | None,
     n_chains: int = 1,
     n_iters: int = 30,
     sampler: str = "lut_ky",
     pin_mask: jax.Array | None = None,
     pin_vals: jax.Array | None = None,
+    carry: MRFChainState | None = None,
+    return_state: bool = False,
 ):
     """Full chromatic Gibbs: n_iters x (even half-step, odd half-step).
 
     Returns final labels (B, H, W) — the approximate MPE state for the
     denoising benchmarks (paper Eqn. 4).  `pin_mask`/`pin_vals` ((H, W)
-    bool / int32) clamp pixels at known labels for the whole run."""
+    bool / int32) clamp pixels at known labels for the whole run.
+    `carry`/`return_state` slice the run: see `mrf_gibbs_loop`."""
     return mrf_gibbs_loop(
-        mrf, evidence, key, n_chains, n_iters, sampler, pin_mask, pin_vals
+        mrf, evidence, key, n_chains, n_iters, sampler, pin_mask, pin_vals,
+        carry=carry, return_state=return_state,
     )
 
 

@@ -142,6 +142,17 @@ def runtime_table(recs: list[dict]) -> str:
             f"| {r['cache_evictions']} | {r['recompiles']} "
             f"| {r['sim_latency_p95_ms']:.2f}ms |"
         )
+    g = next((r for r in recs if "workers_speedup" in r), None)
+    if g:
+        rows += [
+            "",
+            f"executor gates: 4-worker sim speedup "
+            f"{g['workers_speedup']:.2f}x · sliced serving bit-exact "
+            f"({g['slicing_batches']} sliced batches) · calibration median "
+            f"err {g['calib_median_err']:.1%} · bursty max queue depth "
+            f"{g['bursty_max_queue_depth']} at shed rate "
+            f"{g['bursty_shed_rate']:.1%} ({g['bursty_defers']} defers)",
+        ]
     return "\n".join(rows)
 
 

@@ -7,18 +7,32 @@ engine canonicalizes models *structure-only* so every query on a model
 shares one compiled program, buckets compatible queries, and answers each
 microbatch with a single vmapped dispatch of the schedule-direct backend.
 
+Dispatches land on a pool of simulated workers (`executor.WorkerPool` —
+the host-RISC-V work-distribution posture; large MRF buckets shard over a
+mesh slice via `run_sharded`), long queries execute in bit-exact slices so
+short queries interleave (`slice_iters` — continuous batching via chain-
+state carry-over), service times come from measured-time calibration
+(`calibrate.Calibrator`, line model cold), and saturating traffic meets
+token-bucket admission + bounded queues (`admission.AdmissionConfig`).
+
     from repro.runtime import Engine, zipf_trace
 
     models, queries = zipf_trace(60, quick=True)
-    eng = Engine(models)            # backend="schedule" is the default here
+    eng = Engine(models, n_workers=4, slice_iters=16)
     eng.submit(queries)
+    eng.calibrate()                 # optional measured-time warmup
     results = eng.run()             # {qid: QueryResult}
     print(eng.metrics.table())
 
 `python -m repro.runtime --trace zipf --quick` replays the synthetic Zipf
-trace from the CLI.
+trace from the CLI; `--trace bursty --workers 4 --rate-qps ...
+--queue-limit ...` saturates the executor and exercises backpressure.
 """
 
+from repro.runtime.admission import (
+    AdmissionConfig,
+    AdmissionController,
+)
 from repro.runtime.batcher import (
     BucketKey,
     Query,
@@ -27,21 +41,33 @@ from repro.runtime.batcher import (
     execute_bucket,
     pad_size,
 )
+from repro.runtime.calibrate import Calibrator, ServiceSig, sig_of
 from repro.runtime.engine import Engine, EngineConfig
+from repro.runtime.executor import Executor, ExecutorConfig, WorkerPool
 from repro.runtime.metrics import BatchRecord, RuntimeMetrics
-from repro.runtime.trace import zipf_models, zipf_trace
+from repro.runtime.trace import TRACES, bursty_trace, zipf_models, zipf_trace
 
 __all__ = [
+    "AdmissionConfig",
+    "AdmissionController",
     "BucketKey",
     "Query",
     "QueryResult",
     "bucket_key",
     "execute_bucket",
     "pad_size",
+    "Calibrator",
+    "ServiceSig",
+    "sig_of",
     "Engine",
     "EngineConfig",
+    "Executor",
+    "ExecutorConfig",
+    "WorkerPool",
     "BatchRecord",
     "RuntimeMetrics",
+    "TRACES",
+    "bursty_trace",
     "zipf_models",
     "zipf_trace",
 ]

@@ -1,23 +1,27 @@
 """Trace-replay CLI for the serving runtime.
 
     PYTHONPATH=src python -m repro.runtime --trace zipf --quick
+    PYTHONPATH=src python -m repro.runtime --trace bursty --quick --workers 4
 
 Replays a synthetic query trace through the engine and prints the serving
-dashboard (latency percentiles in simulated time, throughput, cache and
-recompile behavior).  CI runs the quick Zipf replay as a smoke job.
+dashboard (latency percentiles in simulated time, throughput, per-worker
+utilization, shed/defer counters, cache and recompile behavior).  CI runs
+the quick Zipf replay and a 4-worker bursty replay (admission control
+enabled) as smoke jobs.
 """
 
 from __future__ import annotations
 
 import argparse
 
+from repro.runtime.admission import AdmissionConfig
 from repro.runtime.engine import Engine, EngineConfig
-from repro.runtime.trace import zipf_trace
+from repro.runtime.trace import TRACES
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="repro.runtime")
-    ap.add_argument("--trace", default="zipf", choices=["zipf"],
+    ap.add_argument("--trace", default="zipf", choices=sorted(TRACES),
                     help="trace family to replay")
     ap.add_argument("--quick", action="store_true",
                     help="small budgets (CI smoke)")
@@ -25,16 +29,37 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--backend", default="schedule",
                     choices=["schedule", "eager"],
-                    help="execution backend (schedule is the runtime "
+                    help="execution backend (schedule is the global "
                          "default; eager is the escape hatch)")
     ap.add_argument("--window-ms", type=float, default=2.0,
                     help="microbatch admission window, simulated ms")
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--capacity", type=int, default=None,
                     help="program-cache capacity override")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="simulated worker count (the executor pool)")
+    ap.add_argument("--shard-width", type=int, default=1,
+                    help="mesh-slice width for sharded MRF dispatches")
+    ap.add_argument("--shard-min-sites", type=int, default=None,
+                    help="route MRF grids with >= this many sites to "
+                         "run_sharded (default: sharded route off)")
+    ap.add_argument("--slice-iters", type=int, default=None,
+                    help="serve long queries in slices of this many sweeps "
+                         "(continuous batching; default: whole-query)")
+    ap.add_argument("--rate-qps", type=float, default=None,
+                    help="token-bucket admission rate (default: open)")
+    ap.add_argument("--burst", type=int, default=16,
+                    help="token-bucket depth")
+    ap.add_argument("--queue-limit", type=int, default=None,
+                    help="bounded per-bucket queue depth (default: open)")
+    ap.add_argument("--policy", default="defer", choices=["defer", "shed"],
+                    help="what an empty token bucket does to an arrival")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="timed warmup dispatches -> measured service "
+                         "times (otherwise the line model serves)")
     args = ap.parse_args(argv)
 
-    models, queries = zipf_trace(
+    models, queries = TRACES[args.trace](
         args.queries, quick=args.quick, seed=args.seed
     )
     # quick mode pads every microbatch to one size: each distinct batch
@@ -42,26 +67,49 @@ def main(argv=None) -> int:
     # path exercised, not the jit cache stress-tested
     pad_sizes = (args.max_batch,) if args.quick else \
         tuple(s for s in (1, 2, 4, 8, 16, 32) if s <= args.max_batch)
+    admission = None
+    if args.rate_qps is not None or args.queue_limit is not None:
+        admission = AdmissionConfig(
+            rate_qps=args.rate_qps, burst=args.burst,
+            queue_limit=args.queue_limit, policy=args.policy,
+        )
     engine = Engine(models, EngineConfig(
         backend=args.backend,
         window_s=args.window_ms * 1e-3,
         max_batch=args.max_batch,
         pad_sizes=pad_sizes,
         cache_capacity=args.capacity,
+        n_workers=args.workers,
+        shard_width=args.shard_width,
+        shard_min_sites=args.shard_min_sites,
+        slice_iters=args.slice_iters,
+        admission=admission,
     ))
     engine.submit(queries)
+    if args.calibrate:
+        cal = engine.calibrate()
+        print(f"[runtime] calibrated {len(cal.measured)} dispatch "
+              "signature(s)")
     results = engine.run()
     s = engine.metrics.summary()
     print(f"[runtime] trace={args.trace} backend={args.backend} "
-          f"models={len(models)} queries={len(results)}")
+          f"workers={args.workers} models={len(models)} "
+          f"served={len(results)} shed={s['sheds']}")
     print(engine.metrics.table())
-    if len(results) != len(queries):
-        print(f"[runtime] ERROR: {len(queries) - len(results)} queries "
-              "unanswered")
+    if len(results) + s["sheds"] != len(queries):
+        print(f"[runtime] ERROR: "
+              f"{len(queries) - len(results) - s['sheds']} queries "
+              "neither served nor shed")
         return 1
     if s["cache_hit_rate"] < 0.9:
         print(f"[runtime] ERROR: program-cache hit rate "
-              f"{s['cache_hit_rate']:.3f} < 0.9 on a Zipf trace")
+              f"{s['cache_hit_rate']:.3f} < 0.9 on a {args.trace} trace")
+        return 1
+    if s["max_queue_depth"] and engine.config.admission and \
+            engine.config.admission.queue_limit is not None and \
+            s["max_queue_depth"] > engine.config.admission.queue_limit:
+        print(f"[runtime] ERROR: max queue depth {s['max_queue_depth']} "
+              f"exceeds the configured limit")
         return 1
     return 0
 

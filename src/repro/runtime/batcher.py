@@ -34,7 +34,12 @@ PAD_SIZES = (1, 2, 4, 8, 16, 32)
 
 @dataclasses.dataclass
 class Query:
-    """One posterior-sampling request against a registered model."""
+    """One posterior-sampling request against a registered model.
+
+    `carry` is engine-internal: a slice continuation is the same query
+    re-entering the arrival queue with its chain state attached and
+    `n_iters` counting the *remaining* sweeps — user-submitted queries
+    leave it None."""
 
     qid: int
     model: str
@@ -47,6 +52,7 @@ class Query:
     sampler: str = "lut_ky"
     seed: int = 0
     arrival_s: float = 0.0
+    carry: object = None  # chain state of a slice continuation
 
 
 @dataclasses.dataclass
@@ -63,6 +69,7 @@ class QueryResult:
     start_s: float = 0.0
     finish_s: float = 0.0
     batch_size: int = 1
+    carry: object = None  # chain state, when the bucket ran return_state
 
     @property
     def latency_s(self) -> float:
@@ -71,7 +78,14 @@ class QueryResult:
 
 @dataclasses.dataclass(frozen=True)
 class BucketKey:
-    """Everything that must be *static* across a microbatch."""
+    """Everything that must be *static* across a microbatch.
+
+    `n_iters` is the sweeps *this dispatch* runs — under slicing that is
+    one slice, not the query's whole budget, which is how a long query's
+    second slice can share a bucket with another long query that asked for
+    a different total.  `resumed` separates fresh buckets (executable
+    initializes chains from seeds) from continuation buckets (executable
+    resumes carried chain state) — they are different jit programs."""
 
     program_key: str
     kind: str
@@ -83,16 +97,23 @@ class BucketKey:
     thin: int
     sampler: str
     backend: str
+    resumed: bool = False
 
 
-def bucket_key(query: Query, graph, backend: str) -> BucketKey:
+def bucket_key(
+    query: Query, graph, backend: str, slice_iters: int | None = None
+) -> BucketKey:
     """The bucket a query lands in, derived without compiling anything
     (`graph` is the model's structure-only IR from engine registration).
 
     MRF execution has no burn-in/thinning concept (it returns final
     states), so those fields are normalized to 0/1 for MRF queries — both
     to make the "ignored" semantics explicit and so queries differing only
-    in dead fields share a bucket instead of splintering microbatches."""
+    in dead fields share a bucket instead of splintering microbatches.
+
+    With `slice_iters`, a query whose remaining budget exceeds it lands in
+    a bucket that runs exactly one slice; the engine re-enqueues the rest
+    as a continuation (`query.carry` set, `n_iters` = what remains)."""
     if graph.kind == "bn":
         clamp = tuple(sorted(int(k) for k in (query.evidence or {})))
         has_pins = False
@@ -101,17 +122,21 @@ def bucket_key(query: Query, graph, backend: str) -> BucketKey:
         clamp = ()
         has_pins = bool(query.evidence)
         burn_in, thin = 0, 1
+    n_iters = query.n_iters
+    if slice_iters is not None:
+        n_iters = min(n_iters, slice_iters)
     return BucketKey(
         program_key=graph.ir_key,
         kind=graph.kind,
         clamp_nodes=clamp,
         has_pins=has_pins,
         n_chains=query.n_chains,
-        n_iters=query.n_iters,
+        n_iters=n_iters,
         burn_in=burn_in,
         thin=thin,
         sampler=query.sampler,
         backend=backend,
+        resumed=query.carry is not None,
     )
 
 
@@ -140,49 +165,72 @@ def _seed_array(queries) -> jax.Array:
 
 @functools.partial(
     jax.jit,
-    static_argnames=("n_chains", "n_iters", "burn_in", "thin", "sampler"),
+    static_argnames=(
+        "n_chains", "n_iters", "burn_in", "thin", "sampler", "return_state",
+    ),
 )
 def _bn_bucket(
-    cbn, groups, ev_vals_q, ev_mask, seeds_q, *,
-    n_chains, n_iters, burn_in, thin, sampler,
+    cbn, groups, ev_vals_q, ev_mask, seeds_q, carry_q, *,
+    n_chains, n_iters, burn_in, thin, sampler, return_state,
 ):
-    def one(ev_vals, seed):
+    """One vmapped BN microbatch.  `carry_q` is a lane-stacked
+    `BNChainState` for a resumed (continuation) bucket — then the seeds are
+    dead lanes and chains resume instead of initializing; fresh buckets
+    pass carry_q=None.  Either way the per-lane bits equal the single-query
+    path with the same carry/seed."""
+
+    def one(ev_vals, seed, carry):
         return backend_mod.bn_rounds_core(
             cbn, groups, jax.random.key(seed), n_chains=n_chains,
             n_iters=n_iters, burn_in=burn_in, sampler=sampler, thin=thin,
             clamp_vals=ev_vals, clamp_mask=ev_mask,
+            carry=carry, return_state=return_state,
         )
 
-    return jax.vmap(one)(ev_vals_q, seeds_q)
+    if carry_q is None:
+        return jax.vmap(lambda e, s: one(e, s, None))(ev_vals_q, seeds_q)
+    return jax.vmap(one)(ev_vals_q, seeds_q, carry_q)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=(
         "mrf", "parities", "n_chains", "n_iters", "sampler", "fused",
-        "interpret", "eager",
+        "interpret", "eager", "return_state",
     ),
 )
 def _mrf_bucket(
-    mrf, parities, imgs_q, seeds_q, pmask_q, pvals_q, *,
-    n_chains, n_iters, sampler, fused, interpret, eager,
+    mrf, parities, imgs_q, seeds_q, pmask_q, pvals_q, carry_q, *,
+    n_chains, n_iters, sampler, fused, interpret, eager, return_state,
 ):
-    def one(img, seed, pm, pv):
+    def one(img, seed, pm, pv, carry):
         key = jax.random.key(seed)
         if eager:
             return mrf_mod.mrf_gibbs_loop(
                 mrf, img, key, n_chains, n_iters, sampler,
                 pin_mask=pm, pin_vals=pv,
+                carry=carry, return_state=return_state,
             )
         return backend_mod.mrf_rounds_core(
             mrf, parities, img, key, n_chains=n_chains, n_iters=n_iters,
             sampler=sampler, fused=fused, interpret=interpret,
             pin_mask=pm, pin_vals=pv,
+            carry=carry, return_state=return_state,
         )
 
+    if pmask_q is None and carry_q is None:
+        return jax.vmap(
+            lambda i, s: one(i, s, None, None, None)
+        )(imgs_q, seeds_q)
     if pmask_q is None:
-        return jax.vmap(lambda i, s: one(i, s, None, None))(imgs_q, seeds_q)
-    return jax.vmap(one)(imgs_q, seeds_q, pmask_q, pvals_q)
+        return jax.vmap(
+            lambda i, s, c: one(i, s, None, None, c)
+        )(imgs_q, seeds_q, carry_q)
+    if carry_q is None:
+        return jax.vmap(
+            lambda i, s, pm, pv: one(i, s, pm, pv, None)
+        )(imgs_q, seeds_q, pmask_q, pvals_q)
+    return jax.vmap(one)(imgs_q, seeds_q, pmask_q, pvals_q, carry_q)
 
 
 # ---------------------------------------------------------------------------
@@ -190,18 +238,43 @@ def _mrf_bucket(
 # ---------------------------------------------------------------------------
 
 
+def _stack_carries(padded: list[Query]):
+    """Lane-stack the per-query chain states of a resumed bucket (pad lanes
+    replicate query 0's state, mirroring the seed/evidence padding)."""
+    return jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *[q.carry for q in padded]
+    )
+
+
+def _lane_state(states, i: int):
+    """Un-stack lane i of a vmapped chain-state pytree."""
+    return jax.tree_util.tree_map(lambda x: x[i], states)
+
+
 def execute_bucket(
-    program, key: BucketKey, queries: list[Query], pad_sizes=PAD_SIZES
+    program,
+    key: BucketKey,
+    queries: list[Query],
+    pad_sizes=PAD_SIZES,
+    return_state: bool = False,
 ) -> list[QueryResult]:
     """Run one microbatch through its program and unpack per-query results.
 
     Pads the query list up to the bucket ladder (replicating query 0 —
     their lanes compute but are discarded), stacks the per-query runtime
-    data, and dispatches a single vmapped executable."""
+    data, and dispatches a single vmapped executable.
+
+    A `resumed` bucket stacks the queries' carried chain states and resumes
+    them instead of seeding fresh chains; `return_state=True` attaches each
+    lane's post-run chain state to its `QueryResult.carry`, which is how
+    the engine slices long queries (continuous batching).  Both are
+    bit-preserving: a lane resumed here equals the same query resumed
+    standalone, whatever its batch-mates."""
     n_real = len(queries)
     n_pad = pad_size(n_real, pad_sizes)
     padded = list(queries) + [queries[0]] * (n_pad - n_real)
     seeds_q = _seed_array(padded)
+    carry_q = _stack_carries(padded) if key.resumed else None
     if key.kind == "bn":
         n = program.ir.n_nodes
         ev_mask = np.zeros(n, bool)
@@ -211,18 +284,21 @@ def execute_bucket(
             for node, val in (q.evidence or {}).items():
                 ev_vals[i, int(node)] = int(val)
         groups = program.clamped_executable(key.clamp_nodes, key.backend)
-        marg, vals = _bn_bucket(
+        out = _bn_bucket(
             program.cbn, groups, jnp.asarray(ev_vals, jnp.int32),
-            jnp.asarray(ev_mask), seeds_q,
+            jnp.asarray(ev_mask), seeds_q, carry_q,
             n_chains=key.n_chains, n_iters=key.n_iters, burn_in=key.burn_in,
-            thin=key.thin, sampler=key.sampler,
+            thin=key.thin, sampler=key.sampler, return_state=return_state,
         )
+        marg, vals = out[0], out[1]
+        states = out[2] if return_state else None
         marg, vals = np.asarray(marg), np.asarray(vals)
         return [
             QueryResult(
                 qid=q.qid, model=q.model, kind="bn", marginals=marg[i],
                 final_state=vals[i], arrival_s=q.arrival_s,
                 batch_size=n_real,
+                carry=_lane_state(states, i) if return_state else None,
             )
             for i, q in enumerate(queries)
         ]
@@ -243,16 +319,19 @@ def execute_bucket(
         parities, eager = ex.parities, False
     else:
         parities, eager = (0, 1), True
-    labels = _mrf_bucket(
-        mrf, parities, imgs, seeds_q, pmask_q, pvals_q,
+    out = _mrf_bucket(
+        mrf, parities, imgs, seeds_q, pmask_q, pvals_q, carry_q,
         n_chains=key.n_chains, n_iters=key.n_iters, sampler=key.sampler,
         fused=False, interpret=jax.default_backend() != "tpu", eager=eager,
+        return_state=return_state,
     )
+    labels, states = (out if return_state else (out, None))
     labels = np.asarray(labels)
     return [
         QueryResult(
             qid=q.qid, model=q.model, kind="mrf", marginals=None,
             final_state=labels[i], arrival_s=q.arrival_s, batch_size=n_real,
+            carry=_lane_state(states, i) if return_state else None,
         )
         for i, q in enumerate(queries)
     ]

@@ -1,50 +1,81 @@
 """The serving engine: a deterministic event loop over batched queries.
 
 This is the software analogue of the AIA chip's query-serving posture —
-many concurrent posterior queries amortized over fixed compiled hardware.
-The engine owns a registry of models (canonicalized structure-only, so
-every query on a model shares one `ir_key` and therefore one program-cache
-slot), admits queries from a trace, groups them into buckets
-(`batcher.BucketKey`), and flushes a bucket when it fills to `max_batch`
-or its oldest query has waited out the microbatch window.
+many concurrent posterior queries amortized over fixed compiled hardware,
+with the host processor distributing work across the mesh.  The engine owns
+a registry of models (canonicalized structure-only, so every query on a
+model shares one `ir_key` and therefore one program-cache slot), admits
+queries from a trace, groups them into buckets (`batcher.BucketKey`), and
+flushes a bucket when it fills to `max_batch` or its oldest query has
+waited out the microbatch window.
 
-Time is *simulated*: the clock advances by a line-model service time
-derived from the program's schedule cost (launch overhead + cycles per
-sweep x iterations x chain waves), never by wall time.  That makes every
-latency number deterministic — the whole loop is single-threaded and
-replayable, so tests can pin p95s to the digit — while the actual sampling
-math still runs for real underneath (results are genuine posteriors).
+Flushed buckets dispatch onto an `executor.WorkerPool` of `n_workers`
+simulated workers with per-worker busy-until clocks, so service overlaps
+across workers while the loop itself stays single-threaded and replayable;
+large MRF buckets can route onto a mesh slice via `run_sharded`
+(`shard_min_sites`).  Long queries execute in slices of `slice_iters`
+sweeps (chain-state carry-over — bit-exact with an uninterrupted run), so
+short queries interleave between a long query's slices: continuous
+batching.  The front door applies `admission.AdmissionConfig` token-bucket
+rate limiting and bounded per-bucket queues (shed/defer) once the executor
+saturates.
 
-`backend="schedule"` is the default here (the runtime is the soak path the
-ROADMAP wants for schedule-direct execution); `Engine(..., backend=
-"eager")` is the escape hatch back to the eager engines.
+Time is *simulated*: the clock advances by the calibrated service time
+(`calibrate.Calibrator` — measured warmup dispatches when available, the
+schedule-cost line model cold), never by wall time.  That makes every
+latency number deterministic — same trace, same calibration table, same
+numbers, every run — while the actual sampling math still runs for real
+underneath (results are genuine posteriors).
+
+`backend="schedule"` is the global default (`CompiledProgram.run` shares
+it since the runtime soak graduated it); `Engine(..., backend="eager")` is
+the escape hatch back to the eager engines.
 """
 
 from __future__ import annotations
 
-import collections
 import dataclasses
+import heapq
 import time
 
 from repro.compile import compile_graph, set_cache_capacity
 from repro.compile import ir as ir_mod
 from repro.core.graphs import DiscreteBayesNet, GridMRF
 from repro.runtime import batcher as batcher_mod
+from repro.runtime.admission import (
+    DEFER,
+    SHED,
+    AdmissionConfig,
+    AdmissionController,
+)
 from repro.runtime.batcher import BucketKey, Query, QueryResult
-from repro.runtime.metrics import BatchRecord, RuntimeMetrics
+from repro.runtime.calibrate import Calibrator
+from repro.runtime.executor import Executor, ExecutorConfig
+from repro.runtime.metrics import RuntimeMetrics
 
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
-    backend: str = "schedule"  # runtime default; "eager" is the escape hatch
+    backend: str = "schedule"  # the global default; "eager" escape hatch
     pipeline: str = "runtime"  # pass list incl. merge_small_colors
     mesh_shape: tuple[int, int] = (4, 4)
     window_s: float = 0.002  # microbatch admission window (simulated)
     max_batch: int = 8
     pad_sizes: tuple[int, ...] = batcher_mod.PAD_SIZES
     cache_capacity: int | None = None  # None: leave the global setting
-    # line service model: cycles -> seconds at the modeled clock, one
-    # launch overhead per microbatch, one wave per `chain_slots` chains
+    # executor: W simulated workers; large MRF buckets can shard over a
+    # mesh slice of shard_width workers (None = sharded route off)
+    n_workers: int = 1
+    shard_width: int = 1
+    shard_min_sites: int | None = None
+    # continuous batching: serve long queries in slices of this many sweeps
+    # (None = whole-query dispatches, the pre-slicing behavior)
+    slice_iters: int | None = None
+    # front-door backpressure (None = open admission)
+    admission: AdmissionConfig | None = None
+    # line service model (the calibrator's cold fallback): cycles -> seconds
+    # at the modeled clock, one launch overhead per microbatch, one wave per
+    # `chain_slots` chains
     clock_hz: float = 500e6
     launch_overhead_cycles: int = 50_000
     chain_slots: int = 256
@@ -57,6 +88,7 @@ class Engine:
         self,
         models: dict[str, DiscreteBayesNet | GridMRF],
         config: EngineConfig | None = None,
+        calibrator: Calibrator | None = None,
         **overrides,
     ):
         if config is None:
@@ -71,7 +103,18 @@ class Engine:
                 f"{config.pad_sizes}; every flush size must pad to a ladder "
                 "shape or each occupancy becomes a fresh compile"
             )
+        if config.slice_iters is not None and config.slice_iters < 1:
+            raise ValueError(
+                f"slice_iters must be >= 1, got {config.slice_iters}"
+            )
+        # fail at construction, not mid-run: ExecutorConfig validates the
+        # worker/slice shape
+        ExecutorConfig(
+            n_workers=config.n_workers, shard_width=config.shard_width,
+            shard_min_sites=config.shard_min_sites,
+        )
         self.config = config
+        self.calibrator = calibrator
         # structure-only canonicalization: per-query evidence never touches
         # the IR, so every query on a model maps to the same program key
         self.graphs = {
@@ -82,6 +125,7 @@ class Engine:
             set_cache_capacity(config.cache_capacity)
         self.metrics = RuntimeMetrics()
         self._queue: list[Query] = []
+        self.shed_qids: list[int] = []
 
     # -- admission ---------------------------------------------------------
 
@@ -118,69 +162,178 @@ class Engine:
             pipeline=self.config.pipeline,
         )
 
-    def _service_s(self, program, key: BucketKey, n_padded: int) -> float:
-        """Line service model (relative units, like `schedule.cost`): the
-        microbatch pays one launch overhead, then every sweep costs the
-        schedule's cycle estimate, repeated for each wave of chains the
-        padded batch occupies."""
+    def _bucket_key(self, q: Query) -> BucketKey:
+        return batcher_mod.bucket_key(
+            q, self.graphs[q.model], self.config.backend,
+            self.config.slice_iters,
+        )
+
+    def _make_calibrator(self) -> Calibrator:
         cfg = self.config
-        sweep = program.schedule.cost()["total_cycles"]
-        waves = -(-n_padded * key.n_chains // cfg.chain_slots)
-        cycles = cfg.launch_overhead_cycles + sweep * key.n_iters * waves
-        return cycles / cfg.clock_hz
+        return Calibrator(
+            clock_hz=cfg.clock_hz,
+            launch_overhead_cycles=cfg.launch_overhead_cycles,
+            chain_slots=cfg.chain_slots,
+        )
+
+    def calibrate(self, queries=None, repeats: int = 2) -> Calibrator:
+        """Measured-time warmup: execute one representative microbatch per
+        distinct bucket signature in `queries` (default: the submitted
+        queue), wall-timed, and freeze the medians into this engine's
+        calibrator (creating one if needed).
+
+        Runs the *same* vmapped executables the serving loop will run, so
+        it doubles as the jit warmup, and the frozen table keeps
+        `run()` deterministic — the loop never reads a wall clock.
+        Returns the calibrator (shareable across engines)."""
+        cfg = self.config
+        if self.calibrator is None:
+            self.calibrator = self._make_calibrator()
+        qs = list(self._queue if queries is None else queries)
+        buckets: dict[BucketKey, list[Query]] = {}
+        for q in sorted(qs, key=lambda q: (q.arrival_s, q.qid)):
+            if q.carry is not None:
+                continue  # continuations can't be warmed without states
+            buckets.setdefault(self._bucket_key(q), []).append(q)
+        return_state = cfg.slice_iters is not None
+        # a throwaway executor: warmup runs the exact execution path the
+        # serving loop will (vmap or sharded per the bucket's route) but
+        # never books the pool
+        executor = Executor(
+            ExecutorConfig(
+                n_workers=cfg.n_workers, shard_width=cfg.shard_width,
+                shard_min_sites=cfg.shard_min_sites,
+            ),
+            self.calibrator, cfg.pad_sizes,
+        )
+
+        def dispatch(program, key, rep_qs, route):
+            executor.execute(program, key, rep_qs, route, return_state)
+            return batcher_mod.pad_size(len(rep_qs), cfg.pad_sizes)
+
+        items = []
+        for key, qlist in buckets.items():
+            program = self._program(qlist[0].model)
+            rep = qlist[: cfg.max_batch]
+            items.append(
+                (program, key, rep, executor.batch_route(program, key, rep))
+            )
+        self.calibrator.warmup(dispatch, items, repeats=repeats)
+        return self.calibrator
 
     # -- the event loop ----------------------------------------------------
 
     def run(self) -> dict[int, QueryResult]:
-        """Drain the submitted queries; returns {qid: QueryResult}.
+        """Drain the submitted queries; returns {qid: QueryResult} for the
+        queries that were served (`metrics` reports the shed ones).
 
-        Single pass, deterministic: admission at the simulated clock,
-        bucket flush on fill-or-window, service time from the line model.
-        The executor is serial (one device), so flushed batches serialize
-        on the clock in flush order."""
+        Single pass, deterministic: admission (token bucket + queue bounds)
+        at the simulated clock, bucket flush on fill-or-window, dispatch
+        onto the worker pool at the calibrated service time.  Long queries
+        re-enter the arrival queue between slices as continuations carrying
+        their chain state — bit-exact with an unsliced run."""
         cfg = self.config
         wall0 = time.perf_counter()
-        incoming = collections.deque(
-            sorted(self._queue, key=lambda q: (q.arrival_s, q.qid))
+        self.metrics = RuntimeMetrics()  # run-scoped cache delta
+        executor = Executor(
+            ExecutorConfig(
+                n_workers=cfg.n_workers, shard_width=cfg.shard_width,
+                shard_min_sites=cfg.shard_min_sites,
+            ),
+            self.calibrator or self._make_calibrator(),
+            cfg.pad_sizes,
         )
+        admission = AdmissionController(cfg.admission)
+        # heap entries (arrival_s, qid, seq, query): seq breaks ties between
+        # a query's re-arrivals (defers, slice continuations) deterministically
+        heap: list = []
+        seq = 0
+        first_arrival: dict[int, float] = {}
+        for q in sorted(self._queue, key=lambda q: (q.arrival_s, q.qid)):
+            first_arrival[q.qid] = q.arrival_s
+            heapq.heappush(heap, (q.arrival_s, q.qid, seq, q))
+            seq += 1
         self._queue = []
         pending: dict[BucketKey, list[Query]] = {}
+        # continuations that met a full bucket wait here (never shed — their
+        # chains are half run) and refill the bucket right after it flushes;
+        # parking them outside the heap keeps `len(bucket) <= queue_limit`
+        # at every instant without perturbing the heap-driven clock (a
+        # heap-parked retry would suppress the `not heap` drain rule and
+        # ulp-step the clock — a livelock)
+        overflow: dict[BucketKey, list[Query]] = {}
         programs: dict[BucketKey, object] = {}
         clock = 0.0
         results: dict[int, QueryResult] = {}
+        return_state = cfg.slice_iters is not None
 
         def admit():
-            while incoming and incoming[0].arrival_s <= clock:
-                q = incoming.popleft()
-                key = batcher_mod.bucket_key(
-                    q, self.graphs[q.model], cfg.backend
-                )
+            nonlocal seq
+            while heap and heap[0][0] <= clock:
+                _, _, _, q = heapq.heappop(heap)
+                if q.carry is None:
+                    # front door: continuations were already admitted once
+                    decision, when = admission.decide(
+                        q.arrival_s, first_arrival[q.qid]
+                    )
+                    if decision == DEFER:
+                        # copy, never mutate: submitted Query objects may be
+                        # replayed through another engine pass
+                        q = dataclasses.replace(q, arrival_s=when)
+                        heapq.heappush(heap, (when, q.qid, seq, q))
+                        seq += 1
+                        continue
+                    if decision == SHED:
+                        admission.record_shed(q.qid, by_queue=False)
+                        continue
+                key = self._bucket_key(q)
+                bucket = pending.setdefault(key, [])
+                if admission.queue_full(len(bucket)):
+                    if q.carry is None:
+                        admission.record_shed(q.qid, by_queue=True)
+                    else:
+                        overflow.setdefault(key, []).append(q)
+                    continue
                 # the program cache's front door: one lookup per admitted
                 # query (this is the hit rate the metrics report), and the
                 # resolved program rides with the bucket to its flush
                 programs[key] = self._program(q.model)
-                pending.setdefault(key, []).append(q)
+                bucket.append(q)
+                admission.note_depth(len(bucket))
 
         def oldest(key):
             return min(q.arrival_s for q in pending[key])
 
         admit()
-        while incoming or pending:
+        while heap or pending:
             # NB: the readiness test and the idle-advance horizon must use
-            # the *identical* float expression `oldest + window`; computing
-            # one as `clock - oldest >= window` lets rounding disagree with
-            # the horizon and spin the loop at a frozen clock
+            # the *identical* float expressions (`oldest + window`, the
+            # pool's `earliest_free`); computing one as `clock - oldest >=
+            # window` lets rounding disagree with the horizon and spin the
+            # loop at a frozen clock
+            free_t = executor.pool.earliest_free()
             ready = [
                 k for k, qs in pending.items()
                 if len(qs) >= cfg.max_batch
                 or clock >= oldest(k) + cfg.window_s
-                or not incoming
-            ]
+                or not heap
+            ] if clock >= free_t else []  # all workers busy: batches grow
             if not ready:
-                # idle: jump to the next arrival or the next window expiry
-                horizons = [incoming[0].arrival_s] if incoming else []
+                # idle: jump to the next *future* event — the next arrival,
+                # the next window expiry, or (with work waiting) the next
+                # worker coming free.  Past horizons must be filtered out:
+                # a window that expired while every worker was busy would
+                # otherwise pin `min(horizons)` at or before the clock and
+                # freeze the loop (its bucket is not ready — the worker
+                # gate vetoed it — so nothing else advances time).  The
+                # case analysis guarantees a future horizon exists here:
+                # arrivals <= clock were admitted, and a busy pool means
+                # free_t > clock.
+                horizons = [heap[0][0]] if heap else []
                 horizons += [oldest(k) + cfg.window_s for k in pending]
-                clock = max(clock, min(horizons))
+                if pending:
+                    horizons.append(free_t)
+                clock = min(h for h in horizons if h > clock)
                 admit()
                 continue
             key = min(ready, key=lambda k: (oldest(k), repr(k)))
@@ -189,35 +342,54 @@ class Engine:
             )[: cfg.max_batch]
             taken = {q.qid for q in qs}
             remaining = [q for q in pending[key] if q.qid not in taken]
+            # the flush made room: parked continuations re-enter first (in
+            # park order), up to the bound
+            parked = overflow.get(key, [])
+            while parked and not admission.queue_full(len(remaining)):
+                remaining.append(parked.pop(0))
+                admission.note_depth(len(remaining))
+            if not parked:
+                overflow.pop(key, None)
             if remaining:
                 pending[key] = remaining
             else:
                 del pending[key]
-            results_batch = self._flush(programs[key], key, qs, clock)
-            clock = results_batch[0].finish_s
-            for r in results_batch:
-                results[r.qid] = r
+            batch, rec = executor.dispatch(
+                programs[key], key, qs, clock, return_state=return_state
+            )
+            self.metrics.record_batch(rec)
+            done = []
+            for q, r in zip(qs, batch):
+                left = q.n_iters - key.n_iters
+                if left > 0:
+                    # continuation: same query, chain state attached, the
+                    # remaining budget, re-arriving when its slice finished
+                    # (a copy — submitted Query objects stay pristine)
+                    cont = dataclasses.replace(
+                        q, carry=r.carry, n_iters=left,
+                        arrival_s=rec.finish_s,
+                    )
+                    heapq.heappush(heap, (rec.finish_s, cont.qid, seq, cont))
+                    seq += 1
+                else:
+                    r.arrival_s = first_arrival[r.qid]
+                    r.carry = None  # slices are internal; results are final
+                    results[r.qid] = r
+                    done.append(r)
+            self.metrics.record_queries(done)
             admit()
+        # every parked continuation refilled its bucket before the loop
+        # could drain (overflow[key] non-empty implies pending[key] was full
+        # an instant ago); a violation here would mean lost queries, which
+        # must crash, not silently under-serve
+        assert not any(overflow.values()), overflow
+        self.metrics.worker_busy_s = tuple(executor.pool.busy_s)
+        self.metrics.sheds = admission.sheds
+        self.metrics.shed_tokens = admission.shed_tokens
+        self.metrics.shed_queue = admission.shed_queue
+        self.metrics.defers = admission.defers
+        self.metrics.max_queue_depth = admission.max_queue_depth
+        self.shed_qids = list(admission.shed_qids)
         self.metrics.wall_s = time.perf_counter() - wall0
         self.metrics.finalize()
         return results
-
-    def _flush(
-        self, program, key: BucketKey, qs: list[Query], clock: float
-    ) -> list[QueryResult]:
-        lower0 = program.clamp_lowerings
-        batch = batcher_mod.execute_bucket(
-            program, key, qs, self.config.pad_sizes
-        )
-        n_padded = batcher_mod.pad_size(len(qs), self.config.pad_sizes)
-        service = self._service_s(program, key, n_padded)
-        for r in batch:
-            r.start_s = clock
-            r.finish_s = clock + service
-        self.metrics.record_batch(BatchRecord(
-            model=qs[0].model, kind=key.kind, n_real=len(qs),
-            n_padded=n_padded, service_s=service,
-            clamp_lowerings=program.clamp_lowerings - lower0,
-        ))
-        self.metrics.record_queries(batch)
-        return batch

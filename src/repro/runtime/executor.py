@@ -1,0 +1,257 @@
+"""The multi-worker executor: sharded dispatch over a simulated worker pool.
+
+This is the host-RISC-V half of the AIA posture the runtime had been
+missing: the chip paper's host core exists to *distribute* sampling work
+across the mesh (and, in the companion multi-chip work, across chips), but
+PR 3's engine dispatched every microbatch on one serial executor.  Here the
+engine hands every flushed bucket to a `WorkerPool` of W simulated workers:
+
+  * each worker is a device (or, for wide dispatches, one lane of a mesh
+    slice) with a **busy-until clock**; a dispatch starts at
+    `max(flush time, worker free time)` and occupies the worker for its
+    predicted service time, so the deterministic event loop overlaps
+    service across workers while the host-side real execution stays
+    single-threaded and replayable;
+  * **large MRF buckets route to `run_sharded`** across a mesh slice of
+    `shard_width` workers (the multi-chip analogue: compute cycles split
+    over the slice, comm cycles do not), occupying every worker in the
+    slice; small buckets take the one-device vmap route exactly as before.
+    When the process actually has >= shard_width JAX devices the sharded
+    route really executes through `CompiledProgram.run_sharded`; otherwise
+    the math falls back to the vmap executable while the *clock* still
+    models the slice — route choice is config-deterministic, never
+    machine-probed at dispatch time.
+
+Service times come from the engine's `Calibrator` (measured when warm, the
+line model cold); the wall time of every real dispatch is recorded next to
+the prediction so the dashboards can report calibration error without the
+simulated clock ever reading a wall clock.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compat
+from repro.runtime import batcher as batcher_mod
+from repro.runtime import calibrate as calibrate_mod
+from repro.runtime.batcher import BucketKey, Query, QueryResult
+from repro.runtime.metrics import BatchRecord
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutorConfig:
+    """Worker-pool shape.  The defaults (one worker, sharded route off)
+    reproduce the single-serial-executor engine exactly."""
+
+    n_workers: int = 1
+    shard_width: int = 1  # mesh-slice width for sharded MRF dispatches
+    shard_min_sites: int | None = None  # route grids >= this; None = never
+
+    def __post_init__(self):
+        if self.n_workers < 1:
+            raise ValueError(f"n_workers must be >= 1, got {self.n_workers}")
+        if self.shard_width < 1:
+            raise ValueError(
+                f"shard_width must be >= 1, got {self.shard_width}"
+            )
+        if self.shard_min_sites is not None and (
+            self.shard_width < 2 or self.shard_width > self.n_workers
+        ):
+            raise ValueError(
+                "the sharded route needs 2 <= shard_width <= n_workers "
+                f"(got shard_width={self.shard_width}, "
+                f"n_workers={self.n_workers})"
+            )
+
+
+class WorkerPool:
+    """W busy-until clocks + per-worker busy-time accounting."""
+
+    def __init__(self, n_workers: int):
+        self.busy_until = [0.0] * n_workers
+        self.busy_s = [0.0] * n_workers
+
+    @property
+    def n_workers(self) -> int:
+        return len(self.busy_until)
+
+    def earliest_free(self) -> float:
+        """When the next worker frees up.  The engine gates flushes on this:
+        a bucket keeps accumulating queries while every worker is busy
+        (adaptive batching — the batch grows exactly while it cannot run
+        anyway), which with one worker reproduces the serial engine's
+        flush cadence."""
+        return min(self.busy_until)
+
+    def assign(self, clock: float, width: int = 1) -> tuple[tuple[int, ...],
+                                                            float]:
+        """Pick the slice of `width` contiguous, slice-aligned workers that
+        can start earliest (ties to the lowest index — fully deterministic).
+        Returns (worker ids, start time)."""
+        n = self.n_workers
+        assert 1 <= width <= n
+        best = None
+        for w0 in range(0, n - width + 1, width):
+            workers = tuple(range(w0, w0 + width))
+            free = max(self.busy_until[w] for w in workers)
+            if best is None or free < best[1]:
+                best = (workers, free)
+        workers, free = best
+        return workers, max(clock, free)
+
+    def commit(self, workers: tuple[int, ...], start: float, finish: float
+               ) -> None:
+        for w in workers:
+            self.busy_until[w] = finish
+            self.busy_s[w] += finish - start
+
+
+class Executor:
+    """Routes flushed buckets onto the pool and runs them for real.
+
+    One instance per engine run (the pool clocks are run-scoped).  The
+    `calibrator` is shared across runs — that is the point of it."""
+
+    def __init__(
+        self,
+        config: ExecutorConfig,
+        calibrator: calibrate_mod.Calibrator,
+        pad_sizes,
+    ):
+        self.config = config
+        self.calibrator = calibrator
+        self.pad_sizes = tuple(pad_sizes)
+        self.pool = WorkerPool(config.n_workers)
+        self._mesh = None
+        self._mesh_probed = False
+
+    # -- routing ------------------------------------------------------------
+
+    def route(self, program, key: BucketKey) -> str:
+        """"sharded" | "vmap", from config + bucket statics alone (never
+        from device availability — the simulated clock must not depend on
+        the machine it replays on)."""
+        cfg = self.config
+        if (
+            cfg.shard_min_sites is not None
+            and key.kind == "mrf"
+            and not key.has_pins
+            and not key.resumed
+            and program.mrf.height * program.mrf.width >= cfg.shard_min_sites
+            and program.mrf.height % cfg.shard_width == 0
+        ):
+            return "sharded"
+        return "vmap"
+
+    def _shard_mesh(self):
+        """A (1, shard_width) ("data", "model") mesh over real devices, or
+        None when the process has too few — probed once, lazily."""
+        if not self._mesh_probed:
+            self._mesh_probed = True
+            if len(jax.devices()) >= self.config.shard_width:
+                self._mesh = compat.make_mesh(
+                    (1, self.config.shard_width), ("data", "model")
+                )
+        return self._mesh
+
+    # -- dispatch -----------------------------------------------------------
+
+    def batch_route(self, program, key: BucketKey, qs: list[Query]) -> str:
+        """The route this specific batch takes: the bucket's static route,
+        demoted to vmap when any query continues past this slice — the
+        sharded path cannot return chain state (run_sharded has no carry
+        support yet, see ROADMAP) and a continuation must never silently
+        restart."""
+        route = self.route(program, key)
+        if route == "sharded" and any(q.n_iters > key.n_iters for q in qs):
+            route = "vmap"
+        return route
+
+    def execute(
+        self,
+        program,
+        key: BucketKey,
+        qs: list[Query],
+        route: str,
+        return_state: bool = False,
+    ) -> list[QueryResult]:
+        """Real execution only (no pool booking): the path `dispatch` runs
+        and `Engine.calibrate`'s timed warmup re-runs, so warmup measures
+        exactly what serving will pay — sharded route included."""
+        if route == "sharded" and self._shard_mesh() is not None:
+            return self._run_sharded(program, key, qs)
+        return batcher_mod.execute_bucket(
+            program, key, qs, self.pad_sizes, return_state=return_state
+        )
+
+    def dispatch(
+        self,
+        program,
+        key: BucketKey,
+        qs: list[Query],
+        clock: float,
+        return_state: bool = False,
+    ) -> tuple[list[QueryResult], BatchRecord]:
+        """Execute one microbatch and place it on the pool's timeline.
+
+        Real execution happens now (host order = flush order, replayable);
+        the simulated start/finish come from the chosen workers' busy-until
+        clocks and the calibrated service prediction."""
+        cfg = self.config
+        route = self.batch_route(program, key, qs)
+        width = cfg.shard_width if route == "sharded" else 1
+        lower0 = program.clamp_lowerings
+        wall0 = time.perf_counter()
+        batch = self.execute(program, key, qs, route, return_state)
+        measured_s = time.perf_counter() - wall0
+        n_padded = batcher_mod.pad_size(len(qs), self.pad_sizes)
+        service_s, service_src = self.calibrator.predict(
+            program, calibrate_mod.sig_of(key, route), n_padded,
+            shard_width=width,
+        )
+        workers, start = self.pool.assign(clock, width)
+        finish = start + service_s
+        self.pool.commit(workers, start, finish)
+        for r in batch:
+            r.start_s = start
+            r.finish_s = finish
+        rec = BatchRecord(
+            model=qs[0].model, kind=key.kind, n_real=len(qs),
+            n_padded=n_padded, service_s=service_s,
+            clamp_lowerings=program.clamp_lowerings - lower0,
+            worker=workers[0], n_workers=len(workers), route=route,
+            start_s=start, finish_s=finish, measured_s=measured_s,
+            service_src=service_src,
+        )
+        return batch, rec
+
+    def _run_sharded(
+        self, program, key: BucketKey, qs: list[Query]
+    ) -> list[QueryResult]:
+        """The real sharded route: each query's grid rows split over the
+        mesh slice via `run_sharded` (pins and resumes never route here;
+        draws use the distributed engines' per-device key folding, so bits
+        legitimately differ from the vmap route — the route is part of the
+        engine config, not a hidden fallback)."""
+        mesh = self._shard_mesh()
+        out = []
+        for q in qs:
+            labels = program.run_sharded(
+                jax.random.key(q.seed), mesh,
+                n_chains=key.n_chains, n_iters=key.n_iters,
+                sampler=key.sampler,
+                evidence=jnp.asarray(np.asarray(q.image, np.int32)),
+                backend=key.backend,
+            )
+            out.append(QueryResult(
+                qid=q.qid, model=q.model, kind="mrf", marginals=None,
+                final_state=np.asarray(labels), arrival_s=q.arrival_s,
+                batch_size=len(qs),
+            ))
+        return out

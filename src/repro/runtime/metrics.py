@@ -1,11 +1,18 @@
 """Serving metrics for the runtime engine: latency percentiles, throughput,
-and the cache behavior that makes or breaks a sampling-as-a-service box.
+per-worker utilization, backpressure counters, and the cache behavior that
+makes or breaks a sampling-as-a-service box.
 
 Latency/throughput numbers are in *simulated* seconds (the engine's
 deterministic clock — same trace, same numbers, every run, which is what
-the tests pin down); `wall_s` is the only wall-clock field and is excluded
-from determinism comparisons.  Cache counters are deltas over the engine
-run, not process-lifetime totals, so one summary describes one trace.
+the tests pin down); `wall_s` is the only wall-clock field the determinism
+comparisons must skip — `measured_s` on batch records (real dispatch wall
+time, kept for calibration-error reporting) never enters the summary
+except through `calib_median_err`, which is advisory.  Cache counters are
+deltas over the engine run, not process-lifetime totals, so one summary
+describes one trace.
+
+Percentiles are honest about tiny samples: p50/p95 of 0 or 1 observations
+is reported as None (rendered "n/a"), never a fabricated number.
 """
 
 from __future__ import annotations
@@ -23,8 +30,27 @@ class BatchRecord:
     kind: str
     n_real: int
     n_padded: int
-    service_s: float
+    service_s: float  # predicted (simulated) service time
     clamp_lowerings: int
+    worker: int = 0  # first worker of the dispatch's slice
+    n_workers: int = 1  # slice width (1 = plain vmap dispatch)
+    route: str = "vmap"  # "vmap" | "sharded"
+    start_s: float = 0.0
+    finish_s: float = 0.0
+    measured_s: float = 0.0  # real dispatch wall time (never drives the sim)
+    service_src: str = "line"  # "measured" | "line"
+
+
+def percentile(samples, q) -> float | None:
+    """np.percentile that refuses to invent statistics: fewer than two
+    samples has no distribution to summarize, so report None ("n/a")."""
+    if len(samples) < 2:
+        return None
+    return float(np.percentile(np.asarray(samples), q))
+
+
+def fmt_ms(seconds: float | None) -> str:
+    return "n/a" if seconds is None else f"{seconds * 1e3:.2f}ms"
 
 
 class RuntimeMetrics:
@@ -36,6 +62,13 @@ class RuntimeMetrics:
         self._cache0 = dict(cache_stats())
         self._cache_frozen: dict | None = None
         self.wall_s = 0.0
+        # executor + admission state, installed by the engine at end-of-run
+        self.worker_busy_s: tuple[float, ...] = (0.0,)
+        self.sheds = 0
+        self.shed_tokens = 0
+        self.shed_queue = 0
+        self.defers = 0
+        self.max_queue_depth = 0
 
     def record_batch(self, rec: BatchRecord) -> None:
         self.batch_records.append(rec)
@@ -65,11 +98,26 @@ class RuntimeMetrics:
         return delta
 
     def summary(self) -> dict:
-        lat = np.array([r.latency_s for r in self.query_records])
+        lat = [r.latency_s for r in self.query_records]
         cache = self.cache_delta()
         clamp_lowerings = sum(b.clamp_lowerings for b in self.batch_records)
         finish = max((r.finish_s for r in self.query_records), default=0.0)
         n = len(self.query_records)
+        p50 = percentile(lat, 50)
+        p95 = percentile(lat, 95)
+        util = tuple(
+            round(b / finish, 6) if finish else 0.0
+            for b in self.worker_busy_s
+        )
+        # advisory calibration error: |predicted - measured| / measured over
+        # dispatches served from the measured table (wall noise — excluded
+        # from determinism comparisons along with wall_s)
+        errs = [
+            abs(b.service_s - b.measured_s) / b.measured_s
+            for b in self.batch_records
+            if b.service_src == "measured" and b.measured_s > 0
+        ]
+        submitted = n + self.sheds
         return {
             "n_queries": n,
             "n_batches": len(self.batch_records),
@@ -78,11 +126,26 @@ class RuntimeMetrics:
                 sum(b.n_real for b in self.batch_records)
                 / max(sum(b.n_padded for b in self.batch_records), 1)
             ),
-            "latency_p50_ms": float(np.percentile(lat, 50)) * 1e3 if n else 0.0,
-            "latency_p95_ms": float(np.percentile(lat, 95)) * 1e3 if n else 0.0,
-            "latency_mean_ms": float(lat.mean()) * 1e3 if n else 0.0,
+            "latency_p50_ms": None if p50 is None else p50 * 1e3,
+            "latency_p95_ms": None if p95 is None else p95 * 1e3,
+            "latency_mean_ms": float(np.mean(lat)) * 1e3 if n else None,
             "sim_elapsed_s": finish,
             "throughput_qps": n / finish if finish else 0.0,
+            "n_workers": len(self.worker_busy_s),
+            "worker_util": util,
+            "sharded_batches": sum(
+                1 for b in self.batch_records if b.route == "sharded"
+            ),
+            "sheds": self.sheds,
+            "shed_tokens": self.shed_tokens,
+            "shed_queue": self.shed_queue,
+            "shed_rate": self.sheds / submitted if submitted else 0.0,
+            "defers": self.defers,
+            "max_queue_depth": self.max_queue_depth,
+            "calib_median_err": (
+                float(np.median(errs)) if errs else None
+            ),
+            "calibrated_batches": len(errs),
             "cache_hits": cache["hits"],
             "cache_misses": cache["misses"],
             "cache_evictions": cache["evictions"],
@@ -97,15 +160,21 @@ class RuntimeMetrics:
     def table(self) -> str:
         """Render the summary as the runtime dashboard block."""
         s = self.summary()
+        util = "/".join(f"{u:.2f}" for u in s["worker_util"])
         rows = [
             "| queries | batches | mean batch | pad eff | p50 | p95 | "
-            "sim qps | hit rate | evict | recompiles | wall |",
-            "|---|---|---|---|---|---|---|---|---|---|---|",
+            "sim qps | workers (util) | shed | defer | maxq | hit rate | "
+            "evict | recompiles | wall |",
+            "|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|",
             (
                 f"| {s['n_queries']} | {s['n_batches']} "
                 f"| {s['mean_batch']:.2f} | {s['pad_efficiency']:.2f} "
-                f"| {s['latency_p50_ms']:.2f}ms | {s['latency_p95_ms']:.2f}ms "
-                f"| {s['throughput_qps']:.1f} | {s['cache_hit_rate']:.3f} "
+                f"| {fmt_ms(None if s['latency_p50_ms'] is None else s['latency_p50_ms'] / 1e3)} "
+                f"| {fmt_ms(None if s['latency_p95_ms'] is None else s['latency_p95_ms'] / 1e3)} "
+                f"| {s['throughput_qps']:.1f} "
+                f"| {s['n_workers']} ({util}) "
+                f"| {s['sheds']} | {s['defers']} | {s['max_queue_depth']} "
+                f"| {s['cache_hit_rate']:.3f} "
                 f"| {s['cache_evictions']} | {s['recompiles']} "
                 f"| {s['wall_s']:.2f}s |"
             ),

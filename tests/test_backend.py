@@ -42,7 +42,7 @@ def _fresh_cache():
 def test_bn_schedule_bit_exact(workload, sampler):
     prog = compile_graph(bn_repository_replica(workload), evidence={0: 0})
     kwargs = dict(n_chains=4, n_iters=12, burn_in=3, sampler=sampler)
-    marg_e, vals_e = prog.run(jax.random.key(9), **kwargs)
+    marg_e, vals_e = prog.run(jax.random.key(9), backend="eager", **kwargs)
     marg_s, vals_s = prog.run(jax.random.key(9), backend="schedule", **kwargs)
     np.testing.assert_array_equal(np.asarray(vals_e), np.asarray(vals_s))
     np.testing.assert_array_equal(np.asarray(marg_e), np.asarray(marg_s))
@@ -55,7 +55,7 @@ def test_mrf_schedule_bit_exact(sampler):
     ev = jnp.asarray(noisy)
     prog = compile_graph(mrf)
     kwargs = dict(n_chains=2, n_iters=8, sampler=sampler, evidence=ev)
-    lab_e = prog.run(jax.random.key(5), **kwargs)
+    lab_e = prog.run(jax.random.key(5), backend="eager", **kwargs)
     lab_s = prog.run(jax.random.key(5), backend="schedule", **kwargs)
     np.testing.assert_array_equal(np.asarray(lab_e), np.asarray(lab_s))
 
@@ -67,7 +67,8 @@ def test_mrf_fused_rounds_bit_exact():
     _, noisy = mrf_mod.make_denoising_problem(8, 8, 4, 0.3, seed=2)
     ev = jnp.asarray(noisy)
     prog = compile_graph(mrf)
-    lab_e = prog.run(jax.random.key(3), n_chains=2, n_iters=5, evidence=ev)
+    lab_e = prog.run(jax.random.key(3), n_chains=2, n_iters=5, evidence=ev,
+                     backend="eager")
     lab_f = prog.run(
         jax.random.key(3), n_chains=2, n_iters=5, evidence=ev,
         backend="schedule", fused=True,
@@ -78,8 +79,9 @@ def test_mrf_fused_rounds_bit_exact():
 def test_fused_requires_schedule_backend_and_lut_ky():
     mrf_prog = compile_graph(GridMRF(4, 4, 2))
     ev = jnp.zeros((4, 4), jnp.int32)
-    with pytest.raises(ValueError):
-        mrf_prog.run(jax.random.key(0), evidence=ev, fused=True)
+    with pytest.raises(ValueError):  # fused needs the schedule backend
+        mrf_prog.run(jax.random.key(0), evidence=ev, fused=True,
+                     backend="eager")
     with pytest.raises(ValueError):
         mrf_prog.run(
             jax.random.key(0), evidence=ev, backend="schedule", fused=True,
