@@ -57,20 +57,23 @@ def _graphs(quick: bool):
     return graphs
 
 
-def _time_run(prog, backend: str, *, n_chains: int, n_iters: int):
+def _time_run(prog, backend: str, *, n_chains: int, n_iters: int,
+              fused: bool = False):
     """Steady-state seconds per Gibbs sweep for one backend (first call —
-    jit compile + the schedule backend's one-time cross-check — untimed)."""
+    jit compile + the schedule backend's one-time cross-check — untimed).
+    `fused=True` routes through the fused Pallas round kernels (schedule
+    backend only; bit-exact, so the delta is pure execution cost)."""
     key = jax.random.key(0)
     if prog.kind == "bn":
         run = lambda: prog.run(
             key, n_chains=n_chains, n_iters=n_iters, burn_in=0,
-            backend=backend,
+            backend=backend, fused=fused,
         )[1]
     else:
         ev = jnp.zeros((prog.mrf.height, prog.mrf.width), jnp.int32)
         run = lambda: prog.run(
             key, n_chains=n_chains, n_iters=n_iters, evidence=ev,
-            backend=backend,
+            backend=backend, fused=fused,
         )
     jax.block_until_ready(run())  # warmup
     t0 = time.perf_counter()
@@ -84,10 +87,12 @@ def _pearson(xs, ys) -> float:
     return float(np.corrcoef(xs, ys)[0, 1])
 
 
-def run(quick: bool = False, backend: str = "schedule"):
+def run(quick: bool = False, backend: str = "schedule",
+        fused: bool = False):
     rows = []
     os.makedirs(RESULTS_DIR, exist_ok=True)
     n_chains, n_iters = (8, 10) if quick else (16, 25)
+    fused_iters = 5 if quick else 10  # interpret hosts: small fused budget
     # (predicted total_cycles, measured s/sweep) pairs per placement family
     corr_pairs = {"greedy": [], "random": []}
     for graph in _graphs(quick):
@@ -120,6 +125,12 @@ def run(quick: bool = False, backend: str = "schedule"):
         eager_s = _time_run(prog, "eager", n_chains=n_chains, n_iters=n_iters)
         sched_s = _time_run(
             prog, "schedule", n_chains=n_chains, n_iters=n_iters)
+        fused_s = float("nan")
+        if fused:
+            fused_s = _time_run(
+                prog, "schedule", n_chains=n_chains, n_iters=fused_iters,
+                fused=True,
+            )
         measured_s = sched_s if backend == "schedule" else eager_s
         rand_measured_s = _time_run(
             rand_progs[0], backend, n_chains=n_chains, n_iters=n_iters)
@@ -147,6 +158,7 @@ def run(quick: bool = False, backend: str = "schedule"):
             "exec_backend": backend,
             "eager_sweep_s": eager_s,
             "schedule_sweep_s": sched_s,
+            "fused_sweep_s": fused_s if fused else None,
             "random_measured_sweep_s": rand_measured_s,
             "pass_times_s": prog.diagnostics["pass_times_s"],
         }
@@ -170,7 +182,8 @@ def run(quick: bool = False, backend: str = "schedule"):
             f"sweep_cycles={cost['total_cycles']};"
             f"random_sweep_cycles={rand_cycles:.0f};"
             f"eager_sweep_us={eager_s*1e6:.0f};"
-            f"schedule_sweep_us={sched_s*1e6:.0f}",
+            f"schedule_sweep_us={sched_s*1e6:.0f}"
+            + (f";fused_sweep_us={fused_s*1e6:.0f}" if fused else ""),
         ))
 
     for fam, pairs in corr_pairs.items():
@@ -191,5 +204,8 @@ if __name__ == "__main__":
                     choices=["eager", "schedule"],
                     help="execution backend measured for the predicted-vs-"
                          "measured cycle correlation")
+    ap.add_argument("--fused", action="store_true",
+                    help="additionally time the fused Pallas round kernels "
+                         "(BN + MRF) on the schedule backend")
     args = ap.parse_args()
-    run(quick=args.quick, backend=args.backend)
+    run(quick=args.quick, backend=args.backend, fused=args.fused)

@@ -1,7 +1,14 @@
 """Benchmark driver — one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows.  ``--quick`` trims budgets;
-``--roofline`` additionally summarizes the dry-run roofline table (requires
+Prints ``name,us_per_call,derived`` CSV rows and, when every suite ran,
+writes the pass to ``benchmarks/results/BENCH_BASELINE.json`` — the
+machine-readable perf trajectory: each PR's full run snapshots every
+suite's rows plus the backend and budget they were measured under, so
+later PRs can diff themselves against a recorded baseline instead of
+folklore (partial ``--smoke``/``--only`` passes leave it untouched).
+``--quick`` trims budgets; ``--fused`` routes the bayesnet/compile suites
+through the fused Pallas kernels as well; ``--roofline`` additionally
+summarizes the dry-run roofline table (requires
 benchmarks/results/dryrun/*.json from repro.launch.dryrun)."""
 
 from __future__ import annotations
@@ -37,6 +44,60 @@ SUITES = {
 # CI sanity set: fast, CPU-friendly, exercises the compile chain end to end
 SMOKE_SUITES = ("coloring", "compile")
 
+# suites that understand the --fused knob (the Pallas round kernels)
+FUSED_SUITES = ("bayesnet", "compile")
+
+BASELINE_PATH = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "results",
+    "BENCH_BASELINE.json",
+)
+
+
+def parse_row(row: str) -> dict:
+    """One ``name,us_per_call,derived`` CSV row -> a JSON-friendly record
+    (``derived`` stays a raw string: its key=value grammar is per-suite)."""
+    name, us, derived = row.split(",", 2)
+    return {"name": name, "us_per_call": float(us), "derived": derived}
+
+
+def write_baseline(suite_rows: dict, args) -> None:
+    """Snapshot this pass as the machine-readable perf baseline.
+
+    Refuses to overwrite a baseline measured under *different* budgets
+    (quick vs full, fused on/off): diffing us_per_call across budget
+    regimes is exactly the folklore this artifact exists to kill.  A
+    mismatched pass lands in BENCH_BASELINE.new.json instead — promote it
+    by hand when the budget change is intentional."""
+    path = BASELINE_PATH
+    if os.path.exists(BASELINE_PATH):
+        with open(BASELINE_PATH) as f:
+            prev = json.load(f)
+        if (prev.get("quick"), prev.get("fused")) != (
+            bool(args.quick), bool(args.fused)
+        ):
+            path = BASELINE_PATH.replace(".json", ".new.json")
+            print(f"# budget mismatch with recorded baseline "
+                  f"(quick={prev.get('quick')}, fused={prev.get('fused')}): "
+                  f"writing {os.path.relpath(path)} instead")
+    record = {
+        "schema": 1,
+        "created_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "backend": __import__("jax").default_backend(),
+        "jax": __import__("jax").__version__,
+        "quick": bool(args.quick),
+        "smoke": bool(args.smoke),
+        "fused": bool(args.fused),
+        "suites": {
+            name: [parse_row(r) for r in rows]
+            for name, rows in suite_rows.items()
+        },
+    }
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+    print(f"# wrote {os.path.relpath(path)} "
+          f"({sum(len(v) for v in record['suites'].values())} rows)")
+
 
 def roofline_summary():
     d = os.path.join(os.path.dirname(os.path.abspath(__file__)), "results",
@@ -69,6 +130,9 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="CI sanity pass: quick budgets, smoke suites only")
     ap.add_argument("--only", default="")
+    ap.add_argument("--fused", action="store_true",
+                    help="route the bayesnet/compile suites through the "
+                         "fused Pallas round kernels as well")
     ap.add_argument("--roofline", action="store_true")
     args = ap.parse_args()
     if args.smoke:
@@ -80,11 +144,22 @@ def main() -> None:
         suites = {k: SUITES[k] for k in SMOKE_SUITES}
     else:
         suites = SUITES
+    suite_rows = {}
     for name, fn in suites.items():
         t0 = time.time()
         print(f"# --- {name} ---", flush=True)
-        fn(quick=args.quick)
+        kwargs = {"quick": args.quick}
+        if args.fused and name in FUSED_SUITES:
+            kwargs["fused"] = True
+        suite_rows[name] = fn(**kwargs) or []
         print(f"# {name} took {time.time()-t0:.1f}s", flush=True)
+    if set(suite_rows) == set(SUITES):
+        write_baseline(suite_rows, args)
+    else:
+        # partial passes (--smoke / --only) must never clobber the
+        # committed full-suite perf baseline
+        print(f"# partial pass ({', '.join(suite_rows)}): "
+              f"{os.path.relpath(BASELINE_PATH)} left untouched")
     if args.roofline:
         print("# --- roofline (from dry-run) ---")
         roofline_summary()

@@ -18,10 +18,12 @@ benchmarks, tests, and future passes/backends.
 from repro.compile.backend import (
     BackendMismatch,
     BNScheduleExec,
+    FUSED_BN_SAMPLERS,
     MRFScheduleExec,
     ScheduleLoweringError,
     cross_check,
     cross_check_clamped,
+    cross_check_fused,
     lower_schedule,
     pin_arrays,
     run_bn_schedule,
@@ -58,6 +60,8 @@ __all__ = [
     "ScheduleLoweringError",
     "cross_check",
     "cross_check_clamped",
+    "cross_check_fused",
+    "FUSED_BN_SAMPLERS",
     "lower_schedule",
     "pin_arrays",
     "run_bn_schedule",

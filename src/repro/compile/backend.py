@@ -41,6 +41,7 @@ from repro.core import mrf as mrf_mod
 from repro.core.graphs import GridMRF
 from repro.core.interp import build_exp_weight_lut
 from repro.kernels import mrf_gibbs as mrf_kernels
+from repro.kernels.bn_gibbs import FUSED_BN_SAMPLERS, check_fused_sampler
 
 
 class ScheduleLoweringError(RuntimeError):
@@ -180,6 +181,7 @@ def pin_arrays(
 def bn_rounds_core(
     cbn, round_groups, key, *, n_chains, n_iters, burn_in, sampler, thin=1,
     clamp_vals=None, clamp_mask=None, carry=None, return_state=False,
+    fused=False, interpret=False,
 ):
     """Un-jitted BN round sweep: init (with optional runtime clamps) + the
     shared `gibbs_run_loop`.  `run_bn_schedule` jits it; the serving batcher
@@ -188,7 +190,12 @@ def bn_rounds_core(
     A `carry` (`bayesnet.BNChainState`) skips the init and resumes the
     chain exactly — the clamped values already live in the carried state and
     clamped nodes are absent from the (same) groups, so slicing a clamped
-    run needs nothing beyond the state itself."""
+    run needs nothing beyond the state itself.
+
+    `fused=True` routes every sweep through the Pallas kernel in
+    `kernels/bn_gibbs.py` (lut_ky/exact_ky only — anything else raises);
+    clamps need no extra handling because clamped nodes are absent from
+    `round_groups` on both paths."""
     if carry is None:
         vals, key = bnet.init_chain_values(
             cbn, key, n_chains, clamp_vals=clamp_vals, clamp_mask=clamp_mask
@@ -198,6 +205,7 @@ def bn_rounds_core(
     return bnet.gibbs_run_loop(
         cbn, round_groups, vals, key, n_iters, burn_in, sampler, thin,
         carry=carry, return_state=return_state,
+        fused=fused, interpret=interpret,
     )
 
 
@@ -205,17 +213,23 @@ def bn_rounds_core(
     jax.jit,
     static_argnames=(
         "n_chains", "n_iters", "burn_in", "sampler", "thin", "return_state",
+        "fused", "interpret",
     ),
+    # sliced serving: resume the carried chain state in place (the caller
+    # must treat a passed carry as consumed — see bayesnet.run_gibbs)
+    donate_argnames=("carry",),
 )
 def _run_bn_rounds(
     cbn, round_groups, key, clamp_vals, clamp_mask, carry, *,
     n_chains, n_iters, burn_in, sampler, thin, return_state,
+    fused=False, interpret=False,
 ):
     return bn_rounds_core(
         cbn, round_groups, key, n_chains=n_chains, n_iters=n_iters,
         burn_in=burn_in, sampler=sampler, thin=thin,
         clamp_vals=clamp_vals, clamp_mask=clamp_mask,
         carry=carry, return_state=return_state,
+        fused=fused, interpret=interpret,
     )
 
 
@@ -252,14 +266,24 @@ def bn_run_clamped(
     thin: int = 1,
     carry=None,
     return_state: bool = False,
+    fused: bool = False,
 ):
     """Execute an already-specialized clamped grouping (from
     `CompiledProgram.clamped_executable`, either backend's) with per-query
-    evidence values; same contract as `bayesnet.run_gibbs`."""
+    evidence values; same contract as `bayesnet.run_gibbs`.
+
+    `fused=True` drives the sweeps through the Pallas BN kernel
+    (lut_ky/exact_ky only — the kernel hard-codes the C1+C2 datapath);
+    random words are derived exactly as `draw_from_logits` derives them, so
+    the fused path stays bit-identical to the eager engine."""
+    if fused:
+        check_fused_sampler(sampler)
+    interpret = jax.default_backend() != "tpu"
     return _run_bn_rounds(
         cbn, round_groups, key, clamp_vals, clamp_mask, carry,
         n_chains=n_chains, n_iters=n_iters, burn_in=burn_in, sampler=sampler,
         thin=thin, return_state=return_state,
+        fused=fused, interpret=interpret,
     )
 
 
@@ -321,6 +345,9 @@ def mrf_rounds_core(
         "mrf", "parities", "n_chains", "n_iters", "sampler", "fused",
         "interpret", "return_state",
     ),
+    # sliced serving: resume the carried labels in place (a passed carry is
+    # consumed — see bayesnet.run_gibbs)
+    donate_argnames=("carry",),
 )
 def _run_mrf_rounds(
     mrf, parities, evidence, key, pin_mask, pin_vals, carry, *,
@@ -421,6 +448,28 @@ def cross_check(program, ex=None) -> None:
         raise BackendMismatch(
             f"schedule backend diverged from eager on program "
             f"{program.program_key[:12]} ({program.kind})"
+        )
+
+
+def cross_check_fused(program, ex: BNScheduleExec, sampler: str = "lut_ky"
+                      ) -> None:
+    """First-use guarantee for the fused BN kernel path: before the Pallas
+    round kernel ever serves a program, a tiny fused run must match the
+    eager engine bit for bit (the eager side never touches the kernel, so
+    a word-derivation or layout drift in `kernels/bn_gibbs.py` is caught
+    here, not in production posteriors)."""
+    import numpy as np
+
+    key = jax.random.key(_CHECK_KEY)
+    kwargs = dict(n_chains=_CHECK_CHAINS, n_iters=_CHECK_ITERS, burn_in=0,
+                  sampler=sampler)
+    marg_e, vals_e = bnet.run_gibbs(program.cbn, key, **kwargs)
+    marg_f, vals_f = run_bn_schedule(ex, key, fused=True, **kwargs)
+    if not ((np.asarray(vals_e) == np.asarray(vals_f)).all()
+            and (np.asarray(marg_e) == np.asarray(marg_f)).all()):
+        raise BackendMismatch(
+            f"fused BN rounds diverged from eager on program "
+            f"{program.program_key[:12]} (sampler={sampler})"
         )
 
 

@@ -66,6 +66,8 @@ class CompiledProgram:
     _clamp_execs: dict = dataclasses.field(default_factory=dict, repr=False)
     # how many clamped lowerings were built (serving metric: "recompiles")
     clamp_lowerings: int = 0
+    # samplers whose fused BN kernel path passed the first-use cross-check
+    _fused_checked: set = dataclasses.field(default_factory=set, repr=False)
 
     @property
     def program_key(self) -> str:
@@ -91,6 +93,20 @@ class CompiledProgram:
             backend_mod.cross_check(self, ex)
             self._schedule_exec = ex
         return self._schedule_exec
+
+    def ensure_fused_cross_check(self, sampler: str) -> None:
+        """First-use gate for the fused BN kernel path (mirrors the
+        schedule backend's first-lowering check): a tiny fused run must
+        match the eager engine bit for bit before `fused=True` ever serves
+        this program with this sampler.  Cached per sampler — the check
+        runs once, the guarantee holds for the program's lifetime."""
+        assert self.kind == "bn"
+        if sampler in self._fused_checked:
+            return
+        backend_mod.cross_check_fused(
+            self, self.schedule_executable(), sampler
+        )
+        self._fused_checked.add(sampler)
 
     def clamped_executable(self, clamp_nodes: tuple[int, ...], backend: str):
         """Round-ordered gather groups specialized for a runtime-evidence
@@ -184,8 +200,10 @@ class CompiledProgram:
         `backend` picks the execution path: "schedule" (the default)
         executes the compiled `Schedule`'s rounds directly — bit-exact with
         "eager", the eager Gibbs engines, cross-checked at first lowering;
-        "eager" is the escape hatch.  `fused` additionally routes MRF
-        schedule rounds through the Pallas kernel (lut_ky only).
+        "eager" is the escape hatch.  `fused` additionally routes the
+        schedule rounds through the fused Pallas kernels — MRF half-steps
+        (lut_ky) and BN color rounds (lut_ky/exact_ky; first fused use per
+        sampler runs its own eager cross-check) — still bit-exact.
 
         `return_state=True` additionally returns the chain state
         (`bayesnet.BNChainState` / `mrf.MRFChainState`) as the last element;
@@ -216,7 +234,8 @@ class CompiledProgram:
                     "evidence={node: value}"
                 )
             if fused:
-                raise ValueError("fused rounds are an MRF-only path")
+                backend_mod.check_fused_sampler(sampler)
+                self.ensure_fused_cross_check(sampler)
             burn_in = 50 if burn_in is None else burn_in
             if evidence is not None:
                 nodes, ev_vals, ev_mask = self._bn_clamp_arrays(evidence)
@@ -226,12 +245,14 @@ class CompiledProgram:
                     n_chains=n_chains, n_iters=n_iters, burn_in=burn_in,
                     sampler=sampler, thin=thin,
                     carry=carry_state, return_state=return_state,
+                    fused=fused,
                 )
             if backend == "schedule":
                 return backend_mod.run_bn_schedule(
                     self.schedule_executable(), key, n_chains=n_chains,
                     n_iters=n_iters, burn_in=burn_in, sampler=sampler,
                     thin=thin, carry=carry_state, return_state=return_state,
+                    fused=fused,
                 )
             return bnet.run_gibbs(
                 self.cbn, key, n_chains=n_chains, n_iters=n_iters,

@@ -28,11 +28,20 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+# The jitted wrappers donate the whole chain-state pytree; the PRNG-key and
+# scalar-counter leaves have no aliasable output when return_state=False and
+# jax warns once per compile.  The partial donation is deliberate (vals and
+# the histogram are the big buffers) — silence exactly that warning.
+warnings.filterwarnings(
+    "ignore", message="Some donated buffers were not usable"
+)
 
 from repro.core import coloring as coloring_mod
 from repro.core import ky as ky_core
@@ -323,10 +332,22 @@ def gibbs_run_loop(
     thin: int = 1,
     carry: BNChainState | None = None,
     return_state: bool = False,
+    fused: bool = False,
+    interpret: bool = False,
 ):
     """The iteration loop shared by the eager engine (`groups=cbn.groups`)
     and the schedule-direct backend (`groups` built from `Schedule.rounds`):
     identical tensors + identical key-split structure => identical bits.
+
+    `fused=True` executes every sweep through the Pallas kernel in
+    `kernels/bn_gibbs.py` — one `pallas_call` per sweep, chain values
+    VMEM-resident across all rounds — bit-exact with the unfused sweep for
+    the samplers the kernel implements (anything else raises here, at
+    trace time, rather than silently falling back).  The key-split
+    structure, histogram accumulation, and carry-state semantics are shared
+    with the unfused path, so slicing and runtime clamps work unchanged:
+    clamped nodes are simply absent from `groups` (the same rebuild baked
+    evidence gets), mirroring how the fused MRF path restores pins.
 
     `thin` keeps every thin-th post-burn-in sweep in the marginal histogram
     (streaming accumulation — no sample matrix is ever materialized); the
@@ -339,6 +360,18 @@ def gibbs_run_loop(
     sliced at any boundaries — with the same static burn_in/thin/groups per
     slice — is bit-exact with the uninterrupted run.  `return_state=True`
     appends the state needed to continue."""
+    if fused:
+        # lazy import: kernels/bn_gibbs imports this module for NEG_INF
+        from repro.kernels import bn_gibbs
+
+        bn_gibbs.check_fused_sampler(sampler)
+        fr = bn_gibbs.build_fused_rounds(groups)
+        sweep = lambda v, k: bn_gibbs.fused_gibbs_sweep(
+            cbn, fr, v, k, sampler, interpret=interpret
+        )
+    else:
+        sweep = lambda v, k: gibbs_sweep(cbn, v, k, sampler, groups)
+
     if carry is None:
         carry = BNChainState(
             vals=vals,
@@ -349,7 +382,7 @@ def gibbs_run_loop(
 
     def body(_, st):
         key, sub = jax.random.split(st.key)
-        vals = gibbs_sweep(cbn, st.vals, sub, sampler, groups)
+        vals = sweep(st.vals, sub)
         onehot = (
             vals[..., None] == jnp.arange(cbn.max_card, dtype=jnp.int32)
         ).astype(jnp.int32)
@@ -373,6 +406,11 @@ def gibbs_run_loop(
     static_argnames=(
         "n_chains", "n_iters", "burn_in", "sampler", "thin", "return_state",
     ),
+    # sliced serving resumes a chain it will never touch again: donating the
+    # carried state lets XLA update it in place instead of copying (B, n)
+    # vals + histogram every slice.  Callers must treat a passed carry as
+    # consumed (tests/test_bn_fused.py has the donation smoke test).
+    donate_argnames=("carry",),
 )
 def run_gibbs(
     cbn: CompiledBayesNet,

@@ -52,3 +52,16 @@ def tpu_compiler_params(**kwargs):
 
     cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
     return cls(**kwargs)
+
+
+def pallas_vmem():
+    """The VMEM memory space across Pallas API generations: `pltpu.VMEM`
+    where exported, `pltpu.TPUMemorySpace.VMEM` on releases that only ship
+    the enum.  Every kernel's BlockSpecs route through here so the repo
+    runs on both the pinned 0.4.x toolchain and current JAX."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    ms = getattr(pltpu, "VMEM", None)
+    if ms is None:
+        ms = pltpu.TPUMemorySpace.VMEM
+    return ms

@@ -16,10 +16,17 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+# see bayesnet.py: chain-state donation is deliberately partial; the
+# unusable-leaf warning is expected noise
+warnings.filterwarnings(
+    "ignore", message="Some donated buffers were not usable"
+)
 
 from repro.core.draws import draw_from_logits
 from repro.core.graphs import GridMRF
@@ -185,6 +192,9 @@ def mrf_gibbs_loop(
 @functools.partial(
     jax.jit,
     static_argnames=("mrf", "n_chains", "n_iters", "sampler", "return_state"),
+    # sliced serving: resume in place instead of copying the carried labels
+    # every slice (a passed carry is consumed — see bayesnet.run_gibbs)
+    donate_argnames=("carry",),
 )
 def run_mrf_gibbs(
     mrf: GridMRF,

@@ -1,0 +1,308 @@
+"""Fused Pallas kernel: one full Bayes-net color round per grid step.
+
+This is the paper's fused C1+C2 datapath on its headline workload: where
+the unfused BN engine runs each color round as ~6 separate XLA kernels —
+`group_log_conditionals` materializes a (B, n_c, F, V) address/log-prob
+tensor in HBM, `draw_from_logits` re-reads it, a scatter writes the state —
+this kernel executes the whole round on VMEM-resident state:
+
+  1. flat-CPT gather              — addresses computed in-kernel from the
+     (base, stride, scope_var) tensors against the log-CPT arena, reading
+     the chain values straight out of the resident value block (the
+     paper's shared-RF access, C4-adjacent);
+  2. LUT-exp weight interpolation — `interp_eval` on the same (1, L) table
+     layout as the MRF kernel (C2; exact_ky runs the exact-exp ablation);
+  3. non-normalized rejection-KY  — the early-exit `ddg_walk` from
+     `ky_sampler.py` over all (chain, node) rows of the round at once (C1);
+  4. in-place scatter             — a one-hot MXU matmul writes the drawn
+     labels back into the value block (no dynamic lane scatter on TPU).
+
+The grid iterates over schedule rounds ("arbitrary" semantics); the value
+block's index map is constant, so the chain state stays in VMEM across the
+*entire sweep* and is written back to HBM once — zero HBM round-trips for
+the per-round conditionals, the paper's private-RF locality argument.
+
+Random words are derived exactly as `draw_from_logits` derives them (one
+`ky_core.random_words` stream per round over the round's *real* row count),
+so lut_ky outputs are bit-identical to the unfused `gibbs_sweep` under the
+same key — asserted by `tests/test_bn_fused.py` and by the backend's
+first-use cross-check (`compile/backend.cross_check_fused`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import compat
+from repro.core import ky as ky_core
+from repro.core.bayesnet import NEG_INF, CompiledBayesNet
+from repro.kernels.interp_lut import interp_eval
+from repro.kernels.ky_sampler import LANES, argmax_fallback, ddg_walk, \
+    preprocess_lanes
+
+# The samplers whose draw pipeline this kernel implements; anything else
+# must be rejected loudly by the callers (never silently fall back).
+FUSED_BN_SAMPLERS = ("lut_ky", "exact_ky")
+
+
+def check_fused_sampler(sampler: str) -> None:
+    """The fused-BN sampler gate, shared by every entry layer (program.run,
+    the backend wrappers, the run loop, the kernel itself): cdf/gumbel draw
+    from a different random stream entirely, so a silent fallback would
+    change which engine served without anyone noticing."""
+    if sampler not in FUSED_BN_SAMPLERS:
+        raise ValueError(
+            f"fused BN rounds implement the {'/'.join(FUSED_BN_SAMPLERS)} "
+            f"datapaths only, got sampler={sampler!r}"
+        )
+
+
+@dataclasses.dataclass
+class BNFusedRounds:
+    """A round-group list padded and stacked for one-kernel execution.
+
+    Per-round gather tensors are padded to the common (c_max, f_max, s_max)
+    envelope and stacked on a leading rounds axis so one `pallas_call` grid
+    step can slice round r with a BlockSpec.  Padding reuses the dummy-slot
+    convention of `bayesnet.build_color_group`: base/stride/scope 0 rows
+    address the arena's zero entry and contribute log-prob 0.0, padded node
+    lanes carry node id -1 so the scatter one-hot drops them."""
+
+    nodes: jax.Array  # (R, C) int32; -1 = padded lane
+    cards: jax.Array  # (R, C) int32; 0 = padded lane
+    base: jax.Array  # (R, C*F) int32
+    stride: jax.Array  # (R, C*F*S) int32
+    scope_var: jax.Array  # (R, C*F*S) int32
+    is_self: jax.Array  # (R, C*F*S) int32 (0/1)
+    n_c: tuple[int, ...]  # static: real node count per round
+    c_max: int
+    f_max: int
+    s_max: int
+
+
+jax.tree_util.register_dataclass(
+    BNFusedRounds,
+    ["nodes", "cards", "base", "stride", "scope_var", "is_self"],
+    ["n_c", "c_max", "f_max", "s_max"],
+)
+
+
+def build_fused_rounds(groups) -> BNFusedRounds:
+    """Stack a `ColorGroup` list into the fused kernel's padded layout.
+
+    Pure jnp (shapes are static), so it runs at trace time inside the
+    jitted run loops — the fused tensors are a deterministic function of
+    the groups pytree and never need a separate compile-time artifact."""
+    c_max = max(g.nodes.shape[0] for g in groups)
+    f_max = max(g.base.shape[1] for g in groups)
+    s_max = max(g.stride.shape[2] for g in groups)
+
+    def pad2(x, fill=0):
+        c, f = x.shape
+        return jnp.pad(x, ((0, c_max - c), (0, f_max - f)),
+                       constant_values=fill).reshape(-1)
+
+    def pad3(x):
+        c, f, s = x.shape
+        return jnp.pad(
+            x, ((0, c_max - c), (0, f_max - f), (0, s_max - s))
+        ).reshape(-1)
+
+    return BNFusedRounds(
+        nodes=jnp.stack([
+            jnp.pad(g.nodes, (0, c_max - g.nodes.shape[0]),
+                    constant_values=-1)
+            for g in groups
+        ]),
+        cards=jnp.stack([
+            jnp.pad(g.cards, (0, c_max - g.cards.shape[0])) for g in groups
+        ]),
+        base=jnp.stack([pad2(g.base) for g in groups]),
+        stride=jnp.stack([pad3(g.stride) for g in groups]),
+        scope_var=jnp.stack([pad3(g.scope_var) for g in groups]),
+        is_self=jnp.stack([pad3(g.is_self.astype(jnp.int32)) for g in groups]),
+        n_c=tuple(int(g.nodes.shape[0]) for g in groups),
+        c_max=c_max,
+        f_max=f_max,
+        s_max=s_max,
+    )
+
+
+def bn_round_step(
+    vals_ref, nodes_ref, cards_ref, base_ref, stride_ref, scope_ref,
+    self_ref, words_ref, logf_ref, tab_ref, out_ref, *,
+    n_chains: int, n_nodes: int, c_max: int, f_max: int, s_max: int,
+    v_max: int, n_words: int, sampler: str, x0: float, dx: float,
+    lut_size: int, weight_bits: int, precision: int, total_steps: int,
+):
+    """One full color round on the VMEM-resident value block (grid step r).
+
+    The op order mirrors `group_log_conditionals` + `draw_from_logits`
+    exactly — same gather addresses, same reduction axes, same float
+    expressions — which is what makes the fused path bit-exact rather than
+    merely statistically equivalent."""
+    r = pl.program_id(0)
+
+    @pl.when(r == 0)
+    def _():
+        out_ref[...] = vals_ref[...]
+
+    vals = out_ref[...]  # (B, n) chain state, resident across rounds
+    nodes = nodes_ref[0, :]  # (C,)
+    cards = cards_ref[0, :]
+    base = base_ref[0, :].reshape(c_max, f_max)
+    stride = stride_ref[0, :].reshape(c_max, f_max, s_max)
+    scope = scope_ref[0, :].reshape(c_max, f_max, s_max)
+    is_self = self_ref[0, :].reshape(c_max, f_max, s_max) != 0
+
+    # --- inline flat-CPT gather (C4-adjacent shared-RF read + C3 layout) ---
+    sv = jnp.take(vals, scope.reshape(-1), axis=1).reshape(
+        n_chains, c_max, f_max, s_max
+    )
+    v_range = jnp.arange(v_max, dtype=jnp.int32)
+    val_or_v = jnp.where(
+        is_self[None, ..., None], v_range, sv[..., None]
+    )  # (B, C, F, S, V)
+    addr = base[None, :, :, None] + jnp.sum(
+        stride[None, ..., None] * val_or_v, axis=-2
+    )  # (B, C, F, V) int32 — exact, padded slots address arena entry 0
+    logf = logf_ref[0, :]
+    logp = jnp.sum(
+        jnp.take(logf, addr.reshape(-1)).reshape(addr.shape), axis=-2
+    )  # (B, C, V)
+    logp = jnp.where(v_range < cards[None, :, None], logp, NEG_INF)
+
+    # --- C2: LUT-exp (or exact-exp ablation) -> integer weights -----------
+    flat = logp.reshape(n_chains * c_max, v_max)
+    z = flat - jnp.max(flat, axis=-1, keepdims=True)
+    if sampler == "lut_ky":
+        w = jnp.maximum(jnp.round(interp_eval(z, tab_ref, x0, dx, lut_size)),
+                        0.0)
+        w = w.astype(jnp.int32)
+    else:  # exact_ky — the exact-exp ablation, same fn as draw_from_logits
+        w = ky_core.quantize_probs(jnp.exp(z), bits=weight_bits)
+    w = jnp.concatenate(
+        [w, jnp.zeros((n_chains * c_max, LANES - v_max), jnp.int32)], axis=1
+    )
+
+    # --- C1: early-exit rejection-KY walk over every (chain, node) row ----
+    words = words_ref[...].reshape(n_chains * c_max, n_words)
+    m_ext = preprocess_lanes(w, v_max, precision)
+    label, _, _, done = ddg_walk(
+        m_ext, words, n_bins=v_max, precision=precision,
+        total_steps=total_steps,
+    )
+    labels = argmax_fallback(w, label, done, v_max).reshape(n_chains, c_max)
+
+    # --- in-place scatter via one-hot MXU matmul (padded lanes: node -1) --
+    onehot = (
+        nodes[:, None]
+        == jax.lax.broadcasted_iota(jnp.int32, (c_max, n_nodes), 1)
+    ).astype(jnp.int32)
+    scattered = jax.lax.dot_general(
+        labels, onehot, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    sel = jnp.max(onehot, axis=0)[None, :] > 0
+    out_ref[...] = jnp.where(sel, scattered, vals)
+
+
+def fused_round_words(
+    fr: BNFusedRounds, key: jax.Array, n_chains: int, n_words: int
+) -> jax.Array:
+    """Per-round packed random words in the kernel's stacked row layout.
+
+    Round r's stream is `ky_core.random_words(keys[r], (B * n_c_r,), W)` —
+    byte-for-byte what `draw_from_logits` would draw for that round's
+    (B, n_c_r, V) logits — reshaped to (B, n_c_r, W), padded to c_max (pad
+    rows read zero bits; their lanes are discarded), and packed as one
+    (R*B, c_max*W) array so a (B, c_max*W) block slices round r."""
+    keys = jax.random.split(key, len(fr.n_c))
+    rows = []
+    for r, nc in enumerate(fr.n_c):
+        wr = ky_core.random_words(keys[r], (n_chains * nc,), n_words)
+        wr = wr.reshape(n_chains, nc, n_words)
+        wr = jnp.pad(wr, ((0, 0), (0, fr.c_max - nc), (0, 0)))
+        rows.append(wr.reshape(n_chains, fr.c_max * n_words))
+    return jnp.concatenate(rows, axis=0)
+
+
+def fused_gibbs_sweep(
+    cbn: CompiledBayesNet,
+    fr: BNFusedRounds,
+    vals: jax.Array,
+    key: jax.Array,
+    sampler: str = "lut_ky",
+    *,
+    precision: int = 16,
+    max_retries: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """Drop-in for `bayesnet.gibbs_sweep` on the fused samplers: one
+    pallas_call executes every round of the sweep with the chain values
+    VMEM-resident throughout, bit-exact with the unfused sweep.
+
+    Raises on samplers outside `FUSED_BN_SAMPLERS` (`check_fused_sampler`)
+    — never a silent fallback."""
+    check_fused_sampler(sampler)
+    b, n = vals.shape
+    v = cbn.max_card
+    assert v < LANES, "pad wider alphabets hierarchically (token_sampler)"
+    weight_bits = 8 if sampler == "lut_ky" else 15
+    # match draw_from_logits' precision widening for the weight-sum bound
+    precision = max(precision, weight_bits + (v - 1).bit_length() + 1)
+    total_steps = precision * max_retries
+    n_words = -(-total_steps // 32)
+    words = fused_round_words(fr, key, b, n_words)
+    logf = jnp.reshape(cbn.log_flat, (1, -1))
+    tab = jnp.reshape(cbn.exp_table, (1, -1)).astype(jnp.float32)
+    n_rounds = len(fr.n_c)
+
+    kernel = functools.partial(
+        bn_round_step, n_chains=b, n_nodes=n, c_max=fr.c_max,
+        f_max=fr.f_max, s_max=fr.s_max, v_max=v, n_words=n_words,
+        sampler=sampler, x0=cbn.exp_spec.x0, dx=cbn.exp_spec.dx,
+        lut_size=cbn.exp_spec.size, weight_bits=weight_bits,
+        precision=precision, total_steps=total_steps,
+    )
+    vmem = compat.pallas_vmem()
+
+    def per_round(cols):
+        return pl.BlockSpec((1, cols), lambda i: (i, 0), memory_space=vmem)
+
+    def resident(rows, cols, space=vmem):
+        return pl.BlockSpec((rows, cols), lambda i: (0, 0),
+                            memory_space=space)
+
+    cfs = fr.c_max * fr.f_max * fr.s_max
+    return pl.pallas_call(
+        kernel,
+        grid=(n_rounds,),
+        in_specs=[
+            resident(b, n),  # initial chain values (read at step 0 only)
+            per_round(fr.c_max),  # nodes
+            per_round(fr.c_max),  # cards
+            per_round(fr.c_max * fr.f_max),  # base
+            per_round(cfs),  # stride
+            per_round(cfs),  # scope_var
+            per_round(cfs),  # is_self
+            # random words: rows [r*B, (r+1)*B) belong to round r
+            pl.BlockSpec((b, fr.c_max * n_words), lambda i: (i, 0),
+                         memory_space=vmem),
+            # log-CPT arena, resident for the whole sweep
+            resident(1, logf.shape[1]),
+            resident(1, tab.shape[1]),  # exp-weight LUT (C2 table)
+        ],
+        out_specs=resident(b, n),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.int32),
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+    )(vals, fr.nodes, fr.cards, fr.base, fr.stride, fr.scope_var,
+      fr.is_self, words, logf, tab)

@@ -14,7 +14,6 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import compat
 from repro.core.interp import LUTSpec
@@ -67,17 +66,18 @@ def interp_kernel(
     kernel = functools.partial(
         _interp_kernel, x0=spec.x0, dx=spec.dx, size=spec.size
     )
+    vmem = compat.pallas_vmem()
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_m, n), lambda i: (i, 0),
-                         memory_space=pltpu.VMEM),
+                         memory_space=vmem),
             pl.BlockSpec((1, table.shape[1]), lambda i: (0, 0),
-                         memory_space=pltpu.VMEM),
+                         memory_space=vmem),
         ],
         out_specs=pl.BlockSpec((block_m, n), lambda i: (i, 0),
-                               memory_space=pltpu.VMEM),
+                               memory_space=vmem),
         out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
         compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel",),

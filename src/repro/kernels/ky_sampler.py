@@ -31,7 +31,6 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import compat
 
@@ -184,7 +183,7 @@ def ky_sample_kernel(
     )
     out_shape = [jax.ShapeDtypeStruct((b, 1), jnp.int32)] * 4
     spec_b = lambda shp: pl.BlockSpec(shp, lambda i: (i, 0),
-                                      memory_space=pltpu.VMEM)
+                                      memory_space=compat.pallas_vmem())
     labels, bits, rejs, fb = pl.pallas_call(
         kernel,
         grid=grid,

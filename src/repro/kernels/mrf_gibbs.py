@@ -23,7 +23,6 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import compat
 from repro.core import ky as ky_core
@@ -141,8 +140,10 @@ def mrf_half_step_kernel(
         n_blocks=n_blocks, width=width,
     )
 
+    vmem = compat.pallas_vmem()
+
     def blk(idx_fn, cols):
-        return pl.BlockSpec((block_h, cols), idx_fn, memory_space=pltpu.VMEM)
+        return pl.BlockSpec((block_h, cols), idx_fn, memory_space=vmem)
 
     n_words_cols = words.shape[1]
     return pl.pallas_call(
@@ -155,7 +156,7 @@ def mrf_half_step_kernel(
             blk(lambda i: (i, 0), width),  # evidence
             blk(lambda i: (i, 0), n_words_cols),  # random words
             pl.BlockSpec((1, exp_table.shape[1]), lambda i: (0, 0),
-                         memory_space=pltpu.VMEM),
+                         memory_space=vmem),
         ],
         out_specs=blk(lambda i: (i, 0), width),
         out_shape=jax.ShapeDtypeStruct((height, width), jnp.int32),

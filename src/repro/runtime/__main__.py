@@ -31,6 +31,9 @@ def main(argv=None) -> int:
                     choices=["schedule", "eager"],
                     help="execution backend (schedule is the global "
                          "default; eager is the escape hatch)")
+    ap.add_argument("--fused", action="store_true",
+                    help="route eligible buckets through the fused Pallas "
+                         "round kernels (bit-exact; schedule backend only)")
     ap.add_argument("--window-ms", type=float, default=2.0,
                     help="microbatch admission window, simulated ms")
     ap.add_argument("--max-batch", type=int, default=8)
@@ -75,6 +78,7 @@ def main(argv=None) -> int:
         )
     engine = Engine(models, EngineConfig(
         backend=args.backend,
+        fused=args.fused,
         window_s=args.window_ms * 1e-3,
         max_batch=args.max_batch,
         pad_sizes=pad_sizes,
@@ -93,7 +97,7 @@ def main(argv=None) -> int:
     results = engine.run()
     s = engine.metrics.summary()
     print(f"[runtime] trace={args.trace} backend={args.backend} "
-          f"workers={args.workers} models={len(models)} "
+          f"fused={args.fused} workers={args.workers} models={len(models)} "
           f"served={len(results)} shed={s['sheds']}")
     print(engine.metrics.table())
     if len(results) + s["sheds"] != len(queries):

@@ -28,8 +28,23 @@ import numpy as np
 
 from repro.compile import backend as backend_mod
 from repro.core import mrf as mrf_mod
+from repro.kernels.bn_gibbs import FUSED_BN_SAMPLERS
 
 PAD_SIZES = (1, 2, 4, 8, 16, 32)
+
+
+def fused_eligible(kind: str, sampler: str, backend: str) -> bool:
+    """Whether a bucket's static signature can route onto the fused Pallas
+    executables: schedule backend + a sampler the kernels implement (BN:
+    lut_ky/exact_ky; MRF: lut_ky).  Eligibility is decided here — per
+    bucket, from statics alone — so an engine with `fused=True` serves
+    eligible buckets fused and the rest unfused, instead of rejecting
+    mixed traffic the way the single-program `run(fused=True)` API does."""
+    if backend != "schedule":
+        return False
+    if kind == "bn":
+        return sampler in FUSED_BN_SAMPLERS
+    return sampler == "lut_ky"
 
 
 @dataclasses.dataclass
@@ -85,7 +100,10 @@ class BucketKey:
     second slice can share a bucket with another long query that asked for
     a different total.  `resumed` separates fresh buckets (executable
     initializes chains from seeds) from continuation buckets (executable
-    resumes carried chain state) — they are different jit programs."""
+    resumes carried chain state) — they are different jit programs.
+    `fused` routes the bucket through the fused Pallas round kernels
+    (bit-exact with unfused, but a different jit program — and a different
+    calibration signature, since its service time differs)."""
 
     program_key: str
     kind: str
@@ -98,10 +116,12 @@ class BucketKey:
     sampler: str
     backend: str
     resumed: bool = False
+    fused: bool = False
 
 
 def bucket_key(
-    query: Query, graph, backend: str, slice_iters: int | None = None
+    query: Query, graph, backend: str, slice_iters: int | None = None,
+    fused: bool = False,
 ) -> BucketKey:
     """The bucket a query lands in, derived without compiling anything
     (`graph` is the model's structure-only IR from engine registration).
@@ -113,7 +133,12 @@ def bucket_key(
 
     With `slice_iters`, a query whose remaining budget exceeds it lands in
     a bucket that runs exactly one slice; the engine re-enqueues the rest
-    as a continuation (`query.carry` set, `n_iters` = what remains)."""
+    as a continuation (`query.carry` set, `n_iters` = what remains).
+
+    `fused=True` (the engine config knob) routes *eligible* buckets onto
+    the fused Pallas executables (`fused_eligible`); ineligible buckets
+    keep the unfused route — never a silent answer change, since fused and
+    unfused are bit-exact for every eligible signature."""
     if graph.kind == "bn":
         clamp = tuple(sorted(int(k) for k in (query.evidence or {})))
         has_pins = False
@@ -137,6 +162,7 @@ def bucket_key(
         sampler=query.sampler,
         backend=backend,
         resumed=query.carry is not None,
+        fused=fused and fused_eligible(graph.kind, query.sampler, backend),
     )
 
 
@@ -167,17 +193,23 @@ def _seed_array(queries) -> jax.Array:
     jax.jit,
     static_argnames=(
         "n_chains", "n_iters", "burn_in", "thin", "sampler", "return_state",
+        "fused", "interpret",
     ),
+    # the stacked carry is built fresh per dispatch (`_stack_carries`), so
+    # donating it costs callers nothing and spares the per-slice state copy
+    donate_argnames=("carry_q",),
 )
 def _bn_bucket(
     cbn, groups, ev_vals_q, ev_mask, seeds_q, carry_q, *,
     n_chains, n_iters, burn_in, thin, sampler, return_state,
+    fused=False, interpret=False,
 ):
     """One vmapped BN microbatch.  `carry_q` is a lane-stacked
     `BNChainState` for a resumed (continuation) bucket — then the seeds are
     dead lanes and chains resume instead of initializing; fresh buckets
     pass carry_q=None.  Either way the per-lane bits equal the single-query
-    path with the same carry/seed."""
+    path with the same carry/seed — fused buckets included (the Pallas
+    round kernel vmaps like any other jax computation)."""
 
     def one(ev_vals, seed, carry):
         return backend_mod.bn_rounds_core(
@@ -185,6 +217,7 @@ def _bn_bucket(
             n_iters=n_iters, burn_in=burn_in, sampler=sampler, thin=thin,
             clamp_vals=ev_vals, clamp_mask=ev_mask,
             carry=carry, return_state=return_state,
+            fused=fused, interpret=interpret,
         )
 
     if carry_q is None:
@@ -198,6 +231,8 @@ def _bn_bucket(
         "mrf", "parities", "n_chains", "n_iters", "sampler", "fused",
         "interpret", "eager", "return_state",
     ),
+    # see _bn_bucket: the stacked carry is dispatch-local, donate it
+    donate_argnames=("carry_q",),
 )
 def _mrf_bucket(
     mrf, parities, imgs_q, seeds_q, pmask_q, pvals_q, carry_q, *,
@@ -284,11 +319,15 @@ def execute_bucket(
             for node, val in (q.evidence or {}).items():
                 ev_vals[i, int(node)] = int(val)
         groups = program.clamped_executable(key.clamp_nodes, key.backend)
+        if key.fused:
+            # same first-use guarantee the single-program path gets
+            program.ensure_fused_cross_check(key.sampler)
         out = _bn_bucket(
             program.cbn, groups, jnp.asarray(ev_vals, jnp.int32),
             jnp.asarray(ev_mask), seeds_q, carry_q,
             n_chains=key.n_chains, n_iters=key.n_iters, burn_in=key.burn_in,
             thin=key.thin, sampler=key.sampler, return_state=return_state,
+            fused=key.fused, interpret=jax.default_backend() != "tpu",
         )
         marg, vals = out[0], out[1]
         states = out[2] if return_state else None
@@ -322,8 +361,8 @@ def execute_bucket(
     out = _mrf_bucket(
         mrf, parities, imgs, seeds_q, pmask_q, pvals_q, carry_q,
         n_chains=key.n_chains, n_iters=key.n_iters, sampler=key.sampler,
-        fused=False, interpret=jax.default_backend() != "tpu", eager=eager,
-        return_state=return_state,
+        fused=key.fused, interpret=jax.default_backend() != "tpu",
+        eager=eager, return_state=return_state,
     )
     labels, states = (out if return_state else (out, None))
     labels = np.asarray(labels)

@@ -53,6 +53,9 @@ class ServiceSig:
     thin: int
     resumed: bool
     route: str  # "vmap" | "sharded"
+    # fused Pallas rounds are bit-exact with unfused but cost differently;
+    # they must not share a measurement
+    fused: bool = False
 
 
 def sig_of(key, route: str = "vmap") -> ServiceSig:
@@ -70,6 +73,7 @@ def sig_of(key, route: str = "vmap") -> ServiceSig:
         thin=key.thin,
         resumed=key.resumed,
         route=route,
+        fused=key.fused,
     )
 
 

@@ -57,6 +57,10 @@ from repro.runtime.metrics import RuntimeMetrics
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
     backend: str = "schedule"  # the global default; "eager" escape hatch
+    # route eligible buckets (BN lut_ky/exact_ky, MRF lut_ky on the
+    # schedule backend) through the fused Pallas round kernels — bit-exact
+    # with unfused, so a pure service-time knob
+    fused: bool = False
     pipeline: str = "runtime"  # pass list incl. merge_small_colors
     mesh_shape: tuple[int, int] = (4, 4)
     window_s: float = 0.002  # microbatch admission window (simulated)
@@ -97,6 +101,8 @@ class Engine:
             config = dataclasses.replace(config, **overrides)
         if config.backend not in ("eager", "schedule"):
             raise ValueError(f"unknown backend {config.backend!r}")
+        if config.fused and config.backend != "schedule":
+            raise ValueError("fused execution requires backend='schedule'")
         if config.max_batch > max(config.pad_sizes):
             raise ValueError(
                 f"max_batch {config.max_batch} exceeds the pad ladder "
@@ -165,7 +171,7 @@ class Engine:
     def _bucket_key(self, q: Query) -> BucketKey:
         return batcher_mod.bucket_key(
             q, self.graphs[q.model], self.config.backend,
-            self.config.slice_iters,
+            self.config.slice_iters, fused=self.config.fused,
         )
 
     def _make_calibrator(self) -> Calibrator:
@@ -215,8 +221,11 @@ class Engine:
         for key, qlist in buckets.items():
             program = self._program(qlist[0].model)
             rep = qlist[: cfg.max_batch]
+            route = executor.batch_route(program, key, rep)
+            # warmup must measure under the key serving will dispatch with
+            # (the sharded route demotes the fused label)
             items.append(
-                (program, key, rep, executor.batch_route(program, key, rep))
+                (program, executor.effective_key(key, route), rep, route)
             )
         self.calibrator.warmup(dispatch, items, repeats=repeats)
         return self.calibrator

@@ -173,6 +173,16 @@ class Executor:
             route = "vmap"
         return route
 
+    def effective_key(self, key: BucketKey, route: str) -> BucketKey:
+        """The key this dispatch *actually* executes under.  The sharded
+        route goes through `run_sharded`, which has no fused path — demote
+        the fused label so metrics and calibration signatures never claim
+        a fused execution that did not happen (and the too-few-devices
+        vmap fallback stays consistent with the sharded leg)."""
+        if route == "sharded" and key.fused:
+            return dataclasses.replace(key, fused=False)
+        return key
+
     def execute(
         self,
         program,
@@ -205,6 +215,7 @@ class Executor:
         clocks and the calibrated service prediction."""
         cfg = self.config
         route = self.batch_route(program, key, qs)
+        key = self.effective_key(key, route)
         width = cfg.shard_width if route == "sharded" else 1
         lower0 = program.clamp_lowerings
         wall0 = time.perf_counter()

@@ -76,7 +76,7 @@ def test_mrf_fused_rounds_bit_exact():
     np.testing.assert_array_equal(np.asarray(lab_e), np.asarray(lab_f))
 
 
-def test_fused_requires_schedule_backend_and_lut_ky():
+def test_fused_requires_schedule_backend_and_fused_samplers():
     mrf_prog = compile_graph(GridMRF(4, 4, 2))
     ev = jnp.zeros((4, 4), jnp.int32)
     with pytest.raises(ValueError):  # fused needs the schedule backend
@@ -87,9 +87,14 @@ def test_fused_requires_schedule_backend_and_lut_ky():
             jax.random.key(0), evidence=ev, backend="schedule", fused=True,
             sampler="cdf",
         )
+    # BN fused rounds exist since the bn_gibbs kernel landed: lut_ky runs,
+    # samplers outside the kernel's datapath still fail loudly
     bn_prog = compile_graph(bn_repository_replica("survey"))
+    bn_prog.run(jax.random.key(0), n_chains=2, n_iters=2,
+                backend="schedule", fused=True)
     with pytest.raises(ValueError):
-        bn_prog.run(jax.random.key(0), backend="schedule", fused=True)
+        bn_prog.run(jax.random.key(0), backend="schedule", fused=True,
+                    sampler="gumbel")
 
 
 def test_unknown_backend_rejected():
