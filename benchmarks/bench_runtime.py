@@ -48,6 +48,7 @@ if __package__ in (None, ""):  # `python benchmarks/bench_runtime.py`
         os.path.abspath(__file__))))
 
 from benchmarks.common import csv_row
+from repro import obs
 from repro.compile import cache_stats, clear_program_cache, compile_graph
 from repro.runtime import (
     AdmissionConfig,
@@ -245,7 +246,43 @@ def gate_bursty(quick: bool) -> dict:
             "bursty_sheds": s1["sheds"], "bursty_defers": s1["defers"]}
 
 
-def run(quick: bool = False, backend: str = "schedule"):
+def trace_snapshot(trace_out: str, quick: bool) -> None:
+    """One traced bursty engine pass: Perfetto timeline + deterministic
+    JSONL + attribution sidecar written alongside the BENCH_BASELINE
+    artifacts, asserted gap-free (every dispatched program has round
+    costs).  Runs with a cold cache and its own tracer so the snapshot is
+    self-contained; tracing is disabled again before the timed passes'
+    numbers could be affected (the snapshot runs after them)."""
+    clear_program_cache()
+    obs.enable()
+    try:
+        models, queries = bursty_trace(60 if quick else 100, quick=True,
+                                       seed=8)
+        eng, _ = _engine_pass(models, queries, n_workers=4)
+        tr = obs.get()
+        events = list(tr.events)
+        base = os.path.splitext(trace_out)[0]
+        obs.export.write_perfetto(trace_out, events)
+        obs.export.write_jsonl(base + ".jsonl", events)
+        rows, gaps = obs.attrib.attribution(
+            obs.export.events_as_dicts(events)
+        )
+        with open(base + ".attrib.json", "w") as f:
+            json.dump({"rows": rows, "gaps": gaps,
+                       "n_events": len(events), "dropped": tr.dropped},
+                      f, indent=1, sort_keys=True)
+        assert not gaps, ("attribution gaps in the trace snapshot", gaps)
+        n_batches = eng.metrics.summary()["n_batches"]
+        n_spans = sum(1 for r in rows if r["kind"] == "round")
+        print(f"[bench_runtime] trace snapshot: {len(events)} events, "
+              f"{n_batches} dispatches, {n_spans} attributed rounds "
+              f"-> {trace_out}", flush=True)
+    finally:
+        obs.disable()
+
+
+def run(quick: bool = False, backend: str = "schedule",
+        trace_out: str | None = None):
     rows = []
     os.makedirs(RESULTS_DIR, exist_ok=True)
     n_queries = 60 if quick else 150
@@ -284,8 +321,8 @@ def run(quick: bool = False, backend: str = "schedule"):
         "n_batches": s["n_batches"],
         "mean_batch": s["mean_batch"],
         "pad_efficiency": s["pad_efficiency"],
-        "sim_latency_p50_ms": s["latency_p50_ms"],
-        "sim_latency_p95_ms": s["latency_p95_ms"],
+        "sim_latency_p50_ms": s["latency_p50_s"] * 1e3,
+        "sim_latency_p95_ms": s["latency_p95_s"] * 1e3,
         "sim_throughput_qps": s["throughput_qps"],
         "batched_wall_s": batched_wall,
         "batched_qps": batched_qps,
@@ -318,7 +355,7 @@ def run(quick: bool = False, backend: str = "schedule"):
         f"speedup={batched_qps / serial_qps:.2f};"
         f"hit_rate={cold_hit_rate:.3f};"
         f"mean_batch={s['mean_batch']:.2f};"
-        f"p95_sim_ms={s['latency_p95_ms']:.2f};"
+        f"p95_sim_ms={s['latency_p95_s'] * 1e3:.2f};"
         f"recompiles={s['recompiles']}",
     ))
 
@@ -342,6 +379,8 @@ def run(quick: bool = False, backend: str = "schedule"):
         f"bursty_shed_rate={gates['bursty_shed_rate']:.3f};"
         f"bursty_defers={gates['bursty_defers']}",
     ))
+    if trace_out:
+        trace_snapshot(trace_out, quick)
     return rows
 
 
@@ -350,5 +389,8 @@ if __name__ == "__main__":
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--backend", default="schedule",
                     choices=["schedule", "eager"])
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="also write a traced bursty-pass snapshot: "
+                         "Perfetto JSON at PATH plus .jsonl/.attrib.json")
     args = ap.parse_args()
-    run(quick=args.quick, backend=args.backend)
+    run(quick=args.quick, backend=args.backend, trace_out=args.trace_out)

@@ -134,6 +134,10 @@ def main() -> None:
                     help="route the bayesnet/compile suites through the "
                          "fused Pallas round kernels as well")
     ap.add_argument("--roofline", action="store_true")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="runtime suite: also write a traced bursty-pass "
+                         "snapshot (Perfetto JSON + .jsonl + .attrib.json) "
+                         "alongside the baseline")
     args = ap.parse_args()
     if args.smoke:
         args.quick = True
@@ -151,6 +155,8 @@ def main() -> None:
         kwargs = {"quick": args.quick}
         if args.fused and name in FUSED_SUITES:
             kwargs["fused"] = True
+        if args.trace_out and name == "runtime":
+            kwargs["trace_out"] = args.trace_out
         suite_rows[name] = fn(**kwargs) or []
         print(f"# {name} took {time.time()-t0:.1f}s", flush=True)
     if set(suite_rows) == set(SUITES):

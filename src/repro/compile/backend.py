@@ -42,6 +42,7 @@ from repro.core.graphs import GridMRF
 from repro.core.interp import build_exp_weight_lut
 from repro.kernels import mrf_gibbs as mrf_kernels
 from repro.kernels.bn_gibbs import FUSED_BN_SAMPLERS, check_fused_sampler
+from repro.obs import tracer
 
 
 class ScheduleLoweringError(RuntimeError):
@@ -279,12 +280,19 @@ def bn_run_clamped(
     if fused:
         check_fused_sampler(sampler)
     interpret = jax.default_backend() != "tpu"
-    return _run_bn_rounds(
-        cbn, round_groups, key, clamp_vals, clamp_mask, carry,
-        n_chains=n_chains, n_iters=n_iters, burn_in=burn_in, sampler=sampler,
-        thin=thin, return_state=return_state,
-        fused=fused, interpret=interpret,
-    )
+    # host-level kernel entry span only: the rounds themselves run inside
+    # jit/fori_loop where the tracer must never be called
+    with tracer.span(
+        "bn_rounds", cat="kernel", sampler=sampler, fused=fused,
+        n_chains=n_chains, n_iters=n_iters, n_rounds=len(round_groups),
+        resumed=carry is not None,
+    ):
+        return _run_bn_rounds(
+            cbn, round_groups, key, clamp_vals, clamp_mask, carry,
+            n_chains=n_chains, n_iters=n_iters, burn_in=burn_in,
+            sampler=sampler, thin=thin, return_state=return_state,
+            fused=fused, interpret=interpret,
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -394,11 +402,17 @@ def run_mrf_schedule(
     if pin_mask is None and ex.pinned:
         pin_mask, pin_vals = pin_arrays(ex.mrf, ex.pinned)
     interpret = jax.default_backend() != "tpu"
-    return _run_mrf_rounds(
-        ex.mrf, ex.parities, evidence, key, pin_mask, pin_vals, carry,
-        n_chains=n_chains, n_iters=n_iters, sampler=sampler, fused=fused,
-        interpret=interpret, return_state=return_state,
-    )
+    # host-level kernel entry span only (see bn_run_clamped)
+    with tracer.span(
+        "mrf_rounds", cat="kernel", sampler=sampler, fused=fused,
+        n_chains=n_chains, n_iters=n_iters, n_rounds=len(ex.parities),
+        resumed=carry is not None, pinned=pin_mask is not None,
+    ):
+        return _run_mrf_rounds(
+            ex.mrf, ex.parities, evidence, key, pin_mask, pin_vals, carry,
+            n_chains=n_chains, n_iters=n_iters, sampler=sampler, fused=fused,
+            interpret=interpret, return_state=return_state,
+        )
 
 
 # ---------------------------------------------------------------------------

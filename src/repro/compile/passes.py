@@ -24,6 +24,7 @@ from repro.compile import schedule as schedule_mod
 from repro.compile.ir import SamplingGraph
 from repro.core import coloring as coloring_mod
 from repro.core import mapping as mapping_mod
+from repro.obs import tracer
 
 
 @dataclasses.dataclass
@@ -56,9 +57,14 @@ class Pass:
         raise NotImplementedError
 
     def __call__(self, ctx: PassContext) -> None:
-        t0 = time.perf_counter()
-        self.run(ctx)
-        ctx.pass_times_s[self.name] = time.perf_counter() - t0
+        with tracer.span(
+            f"pass:{self.name}", cat="compile",
+            ir=ctx.ir.ir_key, n_nodes=ctx.ir.n_nodes,
+            mesh_shape=list(ctx.mesh_shape),
+        ):
+            t0 = time.perf_counter()
+            self.run(ctx)
+            ctx.pass_times_s[self.name] = time.perf_counter() - t0
 
 
 class MoralizePass(Pass):

@@ -49,6 +49,7 @@ from repro.core import distributed as dist_mod
 from repro.core import mrf as mrf_mod
 from repro.core.graphs import DiscreteBayesNet, GridMRF
 from repro.core.mapping import MeshPlacement
+from repro.obs import tracer
 
 
 @dataclasses.dataclass
@@ -89,8 +90,18 @@ class CompiledProgram:
         backends must agree bit for bit before the schedule backend is ever
         trusted with real work."""
         if self._schedule_exec is None:
-            ex = backend_mod.lower_schedule(self)
-            backend_mod.cross_check(self, ex)
+            with tracer.span(
+                "lower_schedule", cat="compile", program=self.program_key,
+                kind=self.kind, n_rounds=len(self.schedule.rounds),
+            ):
+                ex = backend_mod.lower_schedule(self)
+            # the first-lowering cross-check is real compile+execute cost;
+            # traced separately so the timeline shows what trust costs
+            with tracer.span(
+                "cross_check", cat="compile", program=self.program_key,
+                kind=self.kind,
+            ):
+                backend_mod.cross_check(self, ex)
             self._schedule_exec = ex
         return self._schedule_exec
 
@@ -103,9 +114,13 @@ class CompiledProgram:
         assert self.kind == "bn"
         if sampler in self._fused_checked:
             return
-        backend_mod.cross_check_fused(
-            self, self.schedule_executable(), sampler
-        )
+        with tracer.span(
+            "cross_check_fused", cat="compile", program=self.program_key,
+            sampler=sampler,
+        ):
+            backend_mod.cross_check_fused(
+                self, self.schedule_executable(), sampler
+            )
         self._fused_checked.add(sampler)
 
     def clamped_executable(self, clamp_nodes: tuple[int, ...], backend: str):
@@ -121,29 +136,35 @@ class CompiledProgram:
         key = (clamp_nodes, backend)
         groups = self._clamp_execs.get(key)
         if groups is None:
-            if len(set(clamp_nodes)) >= self.ir.n_nodes:
-                # same ValueError on both backends (the schedule lowering
-                # would raise its own ScheduleLoweringError otherwise)
-                raise ValueError(
-                    "runtime evidence clamps every free RV; nothing to sample"
-                )
-            if backend == "schedule":
-                ex = backend_mod.lower_schedule(self, clamp_nodes)
-                backend_mod.cross_check_clamped(self, ex)
-                groups = ex.round_groups
-            else:
-                groups = bnet.build_clamped_groups(
-                    self.ir.source,
-                    [np.asarray(g.nodes) for g in self.cbn.groups],
-                    clamp_nodes,
-                )
-                if not groups:
-                    raise ValueError(
-                        "runtime evidence clamps every free RV; nothing "
-                        "to sample"
-                    )
+            with tracer.span(
+                "clamp_lowering", cat="compile", program=self.program_key,
+                n_clamped=len(set(clamp_nodes)), backend=backend,
+            ):
+                groups = self._build_clamped(clamp_nodes, backend)
             self._clamp_execs[key] = groups
             self.clamp_lowerings += 1
+        return groups
+
+    def _build_clamped(self, clamp_nodes: tuple[int, ...], backend: str):
+        if len(set(clamp_nodes)) >= self.ir.n_nodes:
+            # same ValueError on both backends (the schedule lowering
+            # would raise its own ScheduleLoweringError otherwise)
+            raise ValueError(
+                "runtime evidence clamps every free RV; nothing to sample"
+            )
+        if backend == "schedule":
+            ex = backend_mod.lower_schedule(self, clamp_nodes)
+            backend_mod.cross_check_clamped(self, ex)
+            return ex.round_groups
+        groups = bnet.build_clamped_groups(
+            self.ir.source,
+            [np.asarray(g.nodes) for g in self.cbn.groups],
+            clamp_nodes,
+        )
+        if not groups:
+            raise ValueError(
+                "runtime evidence clamps every free RV; nothing to sample"
+            )
         return groups
 
     def _bn_clamp_arrays(self, evidence: dict):
@@ -344,7 +365,12 @@ def _compile_uncached(
     t0 = time.perf_counter()
     if passes is None:
         passes = passes_mod.named_pipeline(pipeline)
-    ctx = passes_mod.run_pipeline(graph, mesh_shape, passes)
+    with tracer.span(
+        "compile_graph", cat="compile", ir=graph.ir_key, kind=graph.kind,
+        n_nodes=graph.n_nodes, pipeline=pipeline,
+        mesh_shape=list(mesh_shape),
+    ):
+        ctx = passes_mod.run_pipeline(graph, mesh_shape, passes)
     cbn = None
     if graph.kind == "bn":
         cbn = bnet.compile_bayesnet(

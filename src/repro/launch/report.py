@@ -156,6 +156,50 @@ def runtime_table(recs: list[dict]) -> str:
     return "\n".join(rows)
 
 
+def attribution_table(rows: list[dict]) -> str:
+    """Predicted-vs-measured cost attribution (`repro.obs.attrib`): one row
+    per schedule round with its modeled compute/comm cycles, its share of
+    the sweep, and the predicted seconds the dispatches allocated to it —
+    next to the measured wall when the trace recorded one — followed by the
+    per-mechanism comm rows.  Rendered by `python -m repro.obs` and the
+    runtime CLI's `--trace-out` path."""
+
+    def ms(row, field):
+        if row["n_measured"] == 0 and field == "meas_s":
+            return "n/a"
+        return f"{row[field] * 1e3:.2f}ms"
+
+    def err(row):
+        e = row.get("rel_err")
+        return "n/a" if e is None else f"{e:.1%}"
+
+    out = [
+        "| model | kind | round | nodes | mechanism | compute cyc | "
+        "comm cyc | share | disp | pred | meas | err |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["kind"] != "round":
+            continue
+        out.append(
+            f"| {r['model']} | round | {r['round']} | {r['n_nodes']} "
+            f"| {r['mechanism'] or '—'} | {r['compute_cycles']} "
+            f"| {r['comm_cycles']} | {r['share']:.1%} "
+            f"| {r['n_dispatches']} | {ms(r, 'pred_s')} | {ms(r, 'meas_s')} "
+            f"| {err(r)} |"
+        )
+    for r in rows:
+        if r["kind"] != "comm":
+            continue
+        out.append(
+            f"| {r['model']} | comm | — | — | {r['mechanism']} | — "
+            f"| {r['comm_cycles']} | {r['share']:.1%} "
+            f"| {r['n_dispatches']} | {ms(r, 'pred_s')} | {ms(r, 'meas_s')} "
+            f"| {err(r)} |"
+        )
+    return "\n".join(out)
+
+
 def bottleneck_notes(recs: list[dict]) -> str:
     """One sentence per (arch, cell) on what would move the dominant term."""
     notes = {

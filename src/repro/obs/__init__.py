@@ -1,0 +1,60 @@
+"""`repro.obs` — zero-dependency structured tracing for the whole stack.
+
+Spans and counters from the compile chain (per-pass spans, lowering and
+cross-check costs), the serving runtime (flush/admission/dispatch on the
+deterministic simulated clock, one lane per executor worker), the batcher
+(pad decisions), calibration warmup, and the kernel dispatch entries —
+recorded into an in-memory ring buffer and exported two ways:
+
+  * a deterministic JSONL event log (wall fields stripped; same-seed runs
+    are byte-identical — `tests/test_obs.py` pins it), and
+  * a Chrome/Perfetto `trace_event` timeline (open ui.perfetto.dev).
+
+Tracing is off by default and compiles to a single attribute check on
+every instrumented path; enable with `REPRO_TRACE=1` or:
+
+    from repro import obs
+
+    obs.enable()
+    ...                                  # run the engine / compile chain
+    obs.export.write_perfetto("trace.json", obs.get().events)
+    obs.export.write_jsonl("trace.jsonl", obs.get().events)
+    rows, gaps = obs.attrib.attribution(
+        obs.export.events_as_dicts(obs.get().events))
+
+`python -m repro.runtime --trace-out trace.json` wires all of that into
+the serving CLI; `python -m repro.obs trace.jsonl` re-checks a saved log's
+attribution coverage (the CI step).
+"""
+
+from repro.obs import attrib, export, tracer
+from repro.obs.tracer import (
+    DEFAULT_CAPACITY,
+    Event,
+    Tracer,
+    counter,
+    disable,
+    enable,
+    enabled,
+    get,
+    instant,
+    sim_span,
+    span,
+)
+
+__all__ = [
+    "attrib",
+    "export",
+    "tracer",
+    "DEFAULT_CAPACITY",
+    "Event",
+    "Tracer",
+    "counter",
+    "disable",
+    "enable",
+    "enabled",
+    "get",
+    "instant",
+    "sim_span",
+    "span",
+]

@@ -1,0 +1,57 @@
+"""Attribution checker CLI: validate a saved trace's cost attribution.
+
+    python -m repro.obs trace.jsonl          # recompute from the event log
+    python -m repro.obs trace.attrib.json    # validate a saved attribution
+
+Parses the artifact, renders the predicted-vs-measured attribution table
+(`launch/report.py`), and exits non-zero when the attribution has *gaps* —
+dispatched rounds no `round_cost` event covers — or no dispatches at all.
+CI runs this against the bursty-smoke trace artifact so a silent
+attribution hole fails the build instead of shipping.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.launch.report import attribution_table
+from repro.obs import attrib, export
+
+
+def check_rows(rows: list[dict], gaps: list[dict]) -> int:
+    n_rounds = sum(1 for r in rows if r.get("kind") == "round")
+    if not rows or n_rounds == 0:
+        print("[obs] ERROR: attribution is empty (no dispatched rounds)")
+        return 2
+    print(attribution_table(rows))
+    total_disp = max((r.get("n_dispatches", 0) for r in rows), default=0)
+    print(f"\n[obs] {n_rounds} round rows, "
+          f"{sum(1 for r in rows if r.get('kind') == 'comm')} comm rows, "
+          f"{total_disp} dispatches attributed")
+    if gaps:
+        for g in gaps:
+            print(f"[obs] ERROR: attribution gap — program "
+                  f"{g['program'][:16]} (model {g['model']}) dispatched "
+                  f"{g['n_dispatches']}x with no recorded round costs")
+        return 2
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="repro.obs")
+    ap.add_argument("path", help="trace .jsonl event log or .attrib.json")
+    args = ap.parse_args(argv)
+    if args.path.endswith(".jsonl"):
+        events = export.load_jsonl(args.path)
+        rows, gaps = attrib.attribution(events)
+    else:
+        with open(args.path) as f:
+            rec = json.load(f)
+        rows, gaps = rec.get("rows", []), rec.get("gaps", [])
+    return check_rows(rows, gaps)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

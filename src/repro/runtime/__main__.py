@@ -13,7 +13,13 @@ enabled) as smoke jobs.
 from __future__ import annotations
 
 import argparse
+import json
+import os
 
+from repro import obs
+from repro.launch.report import attribution_table
+from repro.obs import attrib as attrib_mod
+from repro.obs import export as export_mod
 from repro.runtime.admission import AdmissionConfig
 from repro.runtime.engine import Engine, EngineConfig
 from repro.runtime.trace import TRACES
@@ -60,7 +66,16 @@ def main(argv=None) -> int:
     ap.add_argument("--calibrate", action="store_true",
                     help="timed warmup dispatches -> measured service "
                          "times (otherwise the line model serves)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Perfetto timeline to PATH, the "
+                         "deterministic JSONL event log next to it "
+                         "(.jsonl), and the predicted-vs-measured "
+                         "attribution (.attrib.json); prints the "
+                         "attribution table and fails on coverage gaps")
     args = ap.parse_args(argv)
+
+    if args.trace_out:
+        obs.enable()
 
     models, queries = TRACES[args.trace](
         args.queries, quick=args.quick, seed=args.seed
@@ -96,6 +111,25 @@ def main(argv=None) -> int:
               "signature(s)")
     results = engine.run()
     s = engine.metrics.summary()
+
+    gaps = []
+    if args.trace_out:
+        tr = obs.get()
+        events = list(tr.events)
+        base = os.path.splitext(args.trace_out)[0]
+        export_mod.write_perfetto(args.trace_out, events)
+        export_mod.write_jsonl(base + ".jsonl", events)
+        dicts = export_mod.events_as_dicts(events)
+        rows, gaps = attrib_mod.attribution(dicts)
+        with open(base + ".attrib.json", "w") as f:
+            json.dump({
+                "rows": rows, "gaps": gaps,
+                "n_events": len(events), "dropped": tr.dropped,
+            }, f, indent=1, sort_keys=True)
+        print(f"[runtime] trace: {args.trace_out} ({len(events)} events, "
+              f"{tr.dropped} dropped) + {base}.jsonl + {base}.attrib.json")
+        print(attribution_table(rows))
+        obs.disable()
     print(f"[runtime] trace={args.trace} backend={args.backend} "
           f"fused={args.fused} workers={args.workers} models={len(models)} "
           f"served={len(results)} shed={s['sheds']}")
@@ -114,6 +148,12 @@ def main(argv=None) -> int:
             s["max_queue_depth"] > engine.config.admission.queue_limit:
         print(f"[runtime] ERROR: max queue depth {s['max_queue_depth']} "
               f"exceeds the configured limit")
+        return 1
+    if gaps:
+        for g in gaps:
+            print(f"[runtime] ERROR: attribution gap — program "
+                  f"{g['program'][:16]} dispatched {g['n_dispatches']}x "
+                  "with no recorded round costs")
         return 1
     return 0
 

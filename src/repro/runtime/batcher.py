@@ -28,6 +28,7 @@ import numpy as np
 
 from repro.compile import backend as backend_mod
 from repro.core import mrf as mrf_mod
+from repro.obs import tracer
 from repro.kernels.bn_gibbs import FUSED_BN_SAMPLERS
 
 PAD_SIZES = (1, 2, 4, 8, 16, 32)
@@ -307,6 +308,22 @@ def execute_bucket(
     standalone, whatever its batch-mates."""
     n_real = len(queries)
     n_pad = pad_size(n_real, pad_sizes)
+    with tracer.span(
+        "execute_bucket", cat="batch",
+        kind=key.kind, sampler=key.sampler, fused=key.fused,
+        resumed=key.resumed, n_real=n_real, n_padded=n_pad,
+        pad_efficiency=round(n_real / n_pad, 6) if n_pad else 0.0,
+        n_iters=key.n_iters, n_chains=key.n_chains,
+    ):
+        return _execute_bucket(
+            program, key, queries, n_real, n_pad, return_state
+        )
+
+
+def _execute_bucket(
+    program, key: BucketKey, queries: list[Query],
+    n_real: int, n_pad: int, return_state: bool,
+) -> list[QueryResult]:
     padded = list(queries) + [queries[0]] * (n_pad - n_real)
     seeds_q = _seed_array(padded)
     carry_q = _stack_carries(padded) if key.resumed else None

@@ -32,6 +32,8 @@ from __future__ import annotations
 import dataclasses
 import time
 
+from repro.obs import tracer
+
 
 @dataclasses.dataclass(frozen=True)
 class ServiceSig:
@@ -166,12 +168,30 @@ class Calibrator:
             sig = sig_of(key, route)
             if self.warmed(sig):
                 continue
-            n_padded = dispatch(program, key, qs, route)  # untimed: compile
+            with tracer.span(
+                "warmup_compile", cat="calibrate",
+                program=sig.program_key, kind=sig.kind,
+                sampler=sig.sampler, route=route, fused=sig.fused,
+            ):
+                # untimed rep: pays the jit compile
+                n_padded = dispatch(program, key, qs, route)
             times = []
-            for _ in range(max(1, repeats)):
-                t0 = time.perf_counter()
-                dispatch(program, key, qs, route)
-                times.append(time.perf_counter() - t0)
+            for rep in range(max(1, repeats)):
+                with tracer.span(
+                    "warmup_rep", cat="calibrate",
+                    program=sig.program_key, kind=sig.kind,
+                    sampler=sig.sampler, route=route, rep=rep,
+                ):
+                    t0 = time.perf_counter()
+                    dispatch(program, key, qs, route)
+                    times.append(time.perf_counter() - t0)
             self.record(sig, n_padded, _median(times))
             out[sig] = self.measured[sig][1]
+            tracer.instant(
+                "calibrated", cat="calibrate",
+                program=sig.program_key, kind=sig.kind,
+                sampler=sig.sampler, route=route,
+                n_padded=n_padded, n_reps=max(1, repeats),
+                wargs={"median_s": self.measured[sig][1]},
+            )
         return out

@@ -41,6 +41,7 @@ import time
 from repro.compile import compile_graph, set_cache_capacity
 from repro.compile import ir as ir_mod
 from repro.core.graphs import DiscreteBayesNet, GridMRF
+from repro.obs import tracer
 from repro.runtime import batcher as batcher_mod
 from repro.runtime.admission import (
     DEFER,
@@ -253,6 +254,12 @@ class Engine:
             cfg.pad_sizes,
         )
         admission = AdmissionController(cfg.admission)
+        tracer.instant(
+            "run_start", cat="runtime", sim_t=0.0,
+            n_workers=cfg.n_workers, backend=cfg.backend, fused=cfg.fused,
+            max_batch=cfg.max_batch, window_s=cfg.window_s,
+            slice_iters=cfg.slice_iters,
+        )
         # heap entries (arrival_s, qid, seq, query): seq breaks ties between
         # a query's re-arrivals (defers, slice continuations) deterministically
         heap: list = []
@@ -286,6 +293,10 @@ class Engine:
                         q.arrival_s, first_arrival[q.qid]
                     )
                     if decision == DEFER:
+                        tracer.instant(
+                            "defer", cat="admission", sim_t=clock,
+                            qid=q.qid, until=when,
+                        )
                         # copy, never mutate: submitted Query objects may be
                         # replayed through another engine pass
                         q = dataclasses.replace(q, arrival_s=when)
@@ -294,12 +305,20 @@ class Engine:
                         continue
                     if decision == SHED:
                         admission.record_shed(q.qid, by_queue=False)
+                        tracer.instant(
+                            "shed", cat="admission", sim_t=clock,
+                            qid=q.qid, by="tokens",
+                        )
                         continue
                 key = self._bucket_key(q)
                 bucket = pending.setdefault(key, [])
                 if admission.queue_full(len(bucket)):
                     if q.carry is None:
                         admission.record_shed(q.qid, by_queue=True)
+                        tracer.instant(
+                            "shed", cat="admission", sim_t=clock,
+                            qid=q.qid, by="queue",
+                        )
                     else:
                         overflow.setdefault(key, []).append(q)
                     continue
@@ -309,6 +328,15 @@ class Engine:
                 programs[key] = self._program(q.model)
                 bucket.append(q)
                 admission.note_depth(len(bucket))
+            if tracer.enabled():
+                tracer.counter(
+                    "queue_depth",
+                    sum(len(b) for b in pending.values()), sim_t=clock,
+                )
+                if admission.config.rate_qps is not None:
+                    tracer.counter(
+                        "tokens", round(admission.tokens, 6), sim_t=clock
+                    )
 
         def oldest(key):
             return min(q.arrival_s for q in pending[key])
@@ -363,6 +391,11 @@ class Engine:
                 pending[key] = remaining
             else:
                 del pending[key]
+            tracer.instant(
+                "flush", cat="runtime", sim_t=clock,
+                model=qs[0].model, kind=key.kind, n_queries=len(qs),
+                full=len(qs) >= cfg.max_batch,
+            )
             batch, rec = executor.dispatch(
                 programs[key], key, qs, clock, return_state=return_state
             )
@@ -393,6 +426,7 @@ class Engine:
         # must crash, not silently under-serve
         assert not any(overflow.values()), overflow
         self.metrics.worker_busy_s = tuple(executor.pool.busy_s)
+        self.metrics.worker_stall_s = tuple(executor.pool.stall_s)
         self.metrics.sheds = admission.sheds
         self.metrics.shed_tokens = admission.shed_tokens
         self.metrics.shed_queue = admission.shed_queue

@@ -38,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import compat
+from repro.obs import tracer
 from repro.runtime import batcher as batcher_mod
 from repro.runtime import calibrate as calibrate_mod
 from repro.runtime.batcher import BucketKey, Query, QueryResult
@@ -76,6 +77,10 @@ class WorkerPool:
     def __init__(self, n_workers: int):
         self.busy_until = [0.0] * n_workers
         self.busy_s = [0.0] * n_workers
+        # idle-while-work-waited: the part of each worker's idle gap during
+        # which its next batch's oldest query had already arrived (idle
+        # blocked on the flush window / batching, not on arrivals)
+        self.stall_s = [0.0] * n_workers
 
     @property
     def n_workers(self) -> int:
@@ -105,9 +110,16 @@ class WorkerPool:
         workers, free = best
         return workers, max(clock, free)
 
-    def commit(self, workers: tuple[int, ...], start: float, finish: float
-               ) -> None:
+    def commit(self, workers: tuple[int, ...], start: float, finish: float,
+               ready_t: float = float("inf")) -> None:
+        """Book a dispatch.  `ready_t` is when this batch's oldest query
+        arrived: any idle between `max(free, ready_t)` and `start` is time
+        the worker sat free *while this work waited* — stall charged to the
+        flush window, not to the arrival process."""
         for w in workers:
+            self.stall_s[w] += max(
+                0.0, start - max(self.busy_until[w], ready_t)
+            )
             self.busy_until[w] = finish
             self.busy_s[w] += finish - start
 
@@ -130,6 +142,7 @@ class Executor:
         self.pool = WorkerPool(config.n_workers)
         self._mesh = None
         self._mesh_probed = False
+        self._rounds_emitted: set[str] = set()  # programs with round_cost out
 
     # -- routing ------------------------------------------------------------
 
@@ -226,12 +239,19 @@ class Executor:
             program, calibrate_mod.sig_of(key, route), n_padded,
             shard_width=width,
         )
+        ready_t = min(q.arrival_s for q in qs)
         workers, start = self.pool.assign(clock, width)
         finish = start + service_s
-        self.pool.commit(workers, start, finish)
+        self.pool.commit(workers, start, finish, ready_t=ready_t)
         for r in batch:
             r.start_s = start
             r.finish_s = finish
+        if tracer.enabled():
+            self._trace_dispatch(
+                program, key, qs, route, workers, start, finish,
+                n_padded=n_padded, service_s=service_s,
+                service_src=service_src, measured_s=measured_s,
+            )
         rec = BatchRecord(
             model=qs[0].model, kind=key.kind, n_real=len(qs),
             n_padded=n_padded, service_s=service_s,
@@ -241,6 +261,65 @@ class Executor:
             service_src=service_src,
         )
         return batch, rec
+
+    # -- tracing ------------------------------------------------------------
+
+    def _emit_round_costs(self, program) -> None:
+        """Once per program: one `round_cost` instant per schedule round —
+        the static cost model attribution joins dispatches against.
+        Emitted here (not at compile time) so cache-hit programs still get
+        coverage in every traced run."""
+        pkey = program.program_key
+        if pkey in self._rounds_emitted:
+            return
+        self._rounds_emitted.add(pkey)
+        sched = program.schedule
+        n_cores = (
+            program.placement.mesh_shape[0] * program.placement.mesh_shape[1]
+        )
+        for idx, r in enumerate(sched.rounds):
+            mech = r.comm[0].mechanism if r.comm else None
+            tracer.instant(
+                "round_cost", cat="cost",
+                program=pkey, round=idx, color=int(r.color),
+                n_nodes=len(r.nodes),
+                compute_cycles=int(r.compute_cycles(n_cores)),
+                comm_cycles=int(r.comm_cycles()),
+                mechanism=mech,
+                n_comm_ops=len(r.comm),
+                comm_bytes=int(sum(op.n_bytes for op in r.comm)),
+            )
+
+    def _trace_dispatch(
+        self, program, key: BucketKey, qs: list[Query], route: str,
+        workers: tuple[int, ...], start: float, finish: float, *,
+        n_padded: int, service_s: float, service_src: str, measured_s: float,
+    ) -> None:
+        """One `dispatch` sim-span on the slice's first worker lane (the
+        span attribution counts), plus `dispatch_lane` spans on the rest of
+        the slice so the timeline shows every occupied worker without
+        double-counting the dispatch."""
+        self._emit_round_costs(program)
+        args = dict(
+            model=qs[0].model, kind=key.kind, route=route,
+            sampler=key.sampler, fused=key.fused,
+            n_real=len(qs), n_padded=n_padded,
+            pad_efficiency=round(len(qs) / n_padded, 6) if n_padded else 0.0,
+            n_iters=key.n_iters, n_chains=key.n_chains,
+            resumed=key.resumed, program=program.program_key,
+            service_s=service_s, service_src=service_src,
+        )
+        tracer.sim_span(
+            "dispatch", start, finish, cat="runtime",
+            track=f"worker{workers[0]}",
+            wargs={"measured_s": measured_s}, **args,
+        )
+        for w in workers[1:]:
+            tracer.sim_span(
+                "dispatch_lane", start, finish, cat="runtime",
+                track=f"worker{w}", model=qs[0].model, route=route,
+                lead_worker=workers[0],
+            )
 
     def _run_sharded(
         self, program, key: BucketKey, qs: list[Query]

@@ -64,6 +64,11 @@ class RuntimeMetrics:
         self.wall_s = 0.0
         # executor + admission state, installed by the engine at end-of-run
         self.worker_busy_s: tuple[float, ...] = (0.0,)
+        # per-worker idle-while-work-waited time (the flush-window stall):
+        # the slice of a worker's idle gap during which its next batch's
+        # oldest query had already arrived — idle *blocked on batching*,
+        # as opposed to idle with nothing to serve
+        self.worker_stall_s: tuple[float, ...] = (0.0,)
         self.sheds = 0
         self.shed_tokens = 0
         self.shed_queue = 0
@@ -109,6 +114,10 @@ class RuntimeMetrics:
             round(b / finish, 6) if finish else 0.0
             for b in self.worker_busy_s
         )
+        stall = tuple(
+            round(s / finish, 6) if finish else 0.0
+            for s in self.worker_stall_s
+        )
         # advisory calibration error: |predicted - measured| / measured over
         # dispatches served from the measured table (wall noise — excluded
         # from determinism comparisons along with wall_s)
@@ -121,18 +130,25 @@ class RuntimeMetrics:
         return {
             "n_queries": n,
             "n_batches": len(self.batch_records),
-            "mean_batch": n / max(len(self.batch_records), 1),
+            # like the percentiles, honest about the degenerate case: with
+            # zero dispatched batches there is no mean batch size to report
+            "mean_batch": (
+                n / len(self.batch_records) if self.batch_records else None
+            ),
             "pad_efficiency": (
                 sum(b.n_real for b in self.batch_records)
                 / max(sum(b.n_padded for b in self.batch_records), 1)
             ),
-            "latency_p50_ms": None if p50 is None else p50 * 1e3,
-            "latency_p95_ms": None if p95 is None else p95 * 1e3,
-            "latency_mean_ms": float(np.mean(lat)) * 1e3 if n else None,
+            # latencies stay in seconds end to end; `table()` formats once
+            # at the edge (the old *_ms keys were converted twice)
+            "latency_p50_s": p50,
+            "latency_p95_s": p95,
+            "latency_mean_s": float(np.mean(lat)) if n else None,
             "sim_elapsed_s": finish,
             "throughput_qps": n / finish if finish else 0.0,
             "n_workers": len(self.worker_busy_s),
             "worker_util": util,
+            "worker_stall_frac": stall,
             "sharded_batches": sum(
                 1 for b in self.batch_records if b.route == "sharded"
             ),
@@ -161,18 +177,23 @@ class RuntimeMetrics:
         """Render the summary as the runtime dashboard block."""
         s = self.summary()
         util = "/".join(f"{u:.2f}" for u in s["worker_util"])
+        stall = "/".join(f"{u:.2f}" for u in s["worker_stall_frac"])
+        mean_batch = (
+            "n/a" if s["mean_batch"] is None else f"{s['mean_batch']:.2f}"
+        )
         rows = [
             "| queries | batches | mean batch | pad eff | p50 | p95 | "
-            "sim qps | workers (util) | shed | defer | maxq | hit rate | "
-            "evict | recompiles | wall |",
-            "|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|",
+            "sim qps | workers (util) | stall | shed | defer | maxq | "
+            "hit rate | evict | recompiles | wall |",
+            "|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|"
+            "---|",
             (
                 f"| {s['n_queries']} | {s['n_batches']} "
-                f"| {s['mean_batch']:.2f} | {s['pad_efficiency']:.2f} "
-                f"| {fmt_ms(None if s['latency_p50_ms'] is None else s['latency_p50_ms'] / 1e3)} "
-                f"| {fmt_ms(None if s['latency_p95_ms'] is None else s['latency_p95_ms'] / 1e3)} "
+                f"| {mean_batch} | {s['pad_efficiency']:.2f} "
+                f"| {fmt_ms(s['latency_p50_s'])} "
+                f"| {fmt_ms(s['latency_p95_s'])} "
                 f"| {s['throughput_qps']:.1f} "
-                f"| {s['n_workers']} ({util}) "
+                f"| {s['n_workers']} ({util}) | {stall} "
                 f"| {s['sheds']} | {s['defers']} | {s['max_queue_depth']} "
                 f"| {s['cache_hit_rate']:.3f} "
                 f"| {s['cache_evictions']} | {s['recompiles']} "

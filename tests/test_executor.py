@@ -421,7 +421,7 @@ def test_multi_worker_qps_beats_serial_and_preserves_bits():
     r4 = e4.run()
     s1, s4 = e1.metrics.summary(), e4.metrics.summary()
     assert s4["throughput_qps"] > s1["throughput_qps"]
-    assert s4["latency_p95_ms"] <= s1["latency_p95_ms"]
+    assert s4["latency_p95_s"] <= s1["latency_p95_s"]
     # worker count changes the clock, never the posterior
     for qid in r1:
         np.testing.assert_array_equal(r1[qid].final_state,
@@ -547,8 +547,11 @@ def test_percentiles_refuse_tiny_samples():
 def test_summary_reports_na_on_empty_and_singleton_runs():
     m = RuntimeMetrics()
     s = m.summary()  # empty run: no crash, no invented latencies
-    assert s["latency_p50_ms"] is None and s["latency_p95_ms"] is None
-    assert s["latency_mean_ms"] is None and s["throughput_qps"] == 0.0
+    assert s["latency_p50_s"] is None and s["latency_p95_s"] is None
+    assert s["latency_mean_s"] is None and s["throughput_qps"] == 0.0
+    # zero dispatched batches: no mean batch size either (satellite fix —
+    # this used to divide by a clamped denominator and report 0.0)
+    assert s["mean_batch"] is None
     assert "n/a" in m.table()
     from repro.runtime.batcher import QueryResult
 
@@ -559,8 +562,10 @@ def test_summary_reports_na_on_empty_and_singleton_runs():
     m.record_batch(BatchRecord(model="m", kind="bn", n_real=1, n_padded=1,
                                service_s=1.0, clamp_lowerings=0))
     s = m.summary()  # singleton: a mean exists, percentiles do not
-    assert s["latency_p50_ms"] is None and s["latency_p95_ms"] is None
-    assert s["latency_mean_ms"] == pytest.approx(2000.0)
+    assert s["latency_p50_s"] is None and s["latency_p95_s"] is None
+    # seconds end to end: the summary never pre-converts to ms (the old
+    # double conversion reported ms-of-ms in table())
+    assert s["latency_mean_s"] == pytest.approx(2.0)
     assert s["n_queries"] == 1
 
 

@@ -379,7 +379,7 @@ def test_engine_answers_every_query_and_is_deterministic():
                                                   key=lambda q: q.qid)]
     s1 = eng1.metrics.summary()
     assert s1["n_queries"] == len(queries)
-    assert s1["latency_p95_ms"] >= s1["latency_p50_ms"] > 0
+    assert s1["latency_p95_s"] >= s1["latency_p50_s"] > 0
 
     # replay from a cold program cache: every simulated metric (and every
     # posterior bit) must reproduce exactly
