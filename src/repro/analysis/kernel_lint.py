@@ -1,0 +1,274 @@
+"""Static VMEM footprint estimator for the fused Pallas kernels.
+
+A fused bucket that exceeds per-core VMEM fails at dispatch time, on
+device, after the batcher has already committed the microbatch.  This
+linter estimates the footprint *statically* — from the model structure,
+chain width, and sampler alone, no JAX import, no trace — so
+`runtime.batcher.fused_eligible` can demote an oversized bucket to the
+unfused route up front (`fused_fits`), and the CLI can flag wide replicas
+(hepar2/pigs-class models) before anyone benchmarks them.
+
+The estimate mirrors the kernels' actual buffer structure:
+
+  * **BN** (`kernels.bn_gibbs.fused_gibbs_sweep`): the VMEM-resident
+    inputs (value block ×2, per-round gather tensors at the padded
+    (c_max, f_max, s_max) envelope, the round's random words, the whole
+    log-CPT arena, the exp LUT) plus the kernel's live intermediates,
+    dominated by the `val_or_v` candidate tensor — (B, C, F, S, V) × 4
+    bytes — and the (B, C, F, V) address/gather pair.  The envelope is
+    re-derived here numpy-only: DSATUR over the IR's moral adjacency
+    gives c_max (bit-identical to `DsaturPass`; `MergeSmallColorsPass`
+    is the identity on DSATUR output, so the runtime pipeline matches
+    too), and f_max/s_max are coloring-independent structural maxima.
+  * **MRF** (`kernels.mrf_gibbs.mrf_half_step_kernel`): one row-block
+    tile — 3 label blocks + evidence + words + the per-candidate energy
+    stack and (site, LANES) draw-stage buffers — times the chain count
+    (the chain vmap batches the grid, so each grid step still holds one
+    chain's tile; chains share nothing, and we budget for the batcher's
+    whole chain width resident at once to stay conservative).
+
+Estimates are deliberately *upper-ish* bounds, not bit-accurate sums:
+Mosaic's scratch allocation and double-buffering are not modeled, so the
+headroom factor below absorbs them.  The point is to demote buckets that
+are clearly over budget, not to pack VMEM to the last byte.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.analysis import Finding
+from repro.core import coloring as coloring_mod
+
+# Per-core VMEM on current TPUs (see /opt/skills/guides: ~16 MiB/core).
+DEFAULT_VMEM_BYTES = 16 * 2**20
+# Fraction of the budget at which a warning (not an error) fires.
+PRESSURE_FRACTION = 0.75
+# Mosaic scratch / double-buffering headroom multiplier on intermediates.
+HEADROOM = 1.25
+
+# Mirrors kernels.ky_sampler.LANES (the KY walk's fixed lane width).  Kept
+# as a literal so this module stays jax-free; tests/test_analysis.py pins
+# the two constants together.
+KY_LANES = 128
+# Mirrors bayesnet.build_exp_weight_lut defaults (paper Sec. III-D).
+EXP_LUT_SIZE = 16
+ITEM_BYTES = 4  # int32 / float32 throughout both kernels
+
+_VMEM_BUDGET = DEFAULT_VMEM_BYTES
+
+
+def vmem_budget() -> int:
+    return _VMEM_BUDGET
+
+
+def set_vmem_budget(n_bytes: int) -> int:
+    """Set the global VMEM budget the linter (and through `fused_fits`,
+    the batcher's fused-demotion check) enforces.  Returns the previous
+    budget so tests can restore it."""
+    global _VMEM_BUDGET
+    if n_bytes < 1:
+        raise ValueError(f"VMEM budget must be positive, got {n_bytes}")
+    prev, _VMEM_BUDGET = _VMEM_BUDGET, int(n_bytes)
+    _FIT_CACHE.clear()
+    return prev
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelFootprint:
+    """A kernel's estimated per-core VMEM residency, with the breakdown
+    that tells a human *which* buffer blew the budget."""
+
+    kernel: str  # "bn_fused" | "mrf_fused"
+    model: str
+    n_chains: int
+    sampler: str
+    input_bytes: int
+    intermediate_bytes: int
+    breakdown: dict
+
+    @property
+    def total_bytes(self) -> int:
+        return self.input_bytes + int(self.intermediate_bytes * HEADROOM)
+
+    def findings(
+        self, budget: int | None = None, demotable: bool = True
+    ) -> list[Finding]:
+        """`demotable=True` (the default) means the batcher's `fused_fits`
+        guard will route this bucket unfused before it ever dispatches, so
+        an over-budget estimate is a capacity advisory (warning) rather
+        than an OOM-in-waiting (error).  Pass False when lint is asked
+        about a forced-fused path with no demotion guard."""
+        budget = _VMEM_BUDGET if budget is None else budget
+        total = self.total_bytes
+        loc = f"{self.model}:{self.kernel}"
+        top = max(self.breakdown, key=self.breakdown.get)
+        detail = (
+            f"estimated {total / 2**20:.2f} MiB resident "
+            f"(B={self.n_chains}, sampler={self.sampler}; dominant buffer "
+            f"{top!r} at {self.breakdown[top] / 2**20:.2f} MiB) vs "
+            f"{budget / 2**20:.2f} MiB budget"
+        )
+        if total > budget:
+            if demotable:
+                detail += "; batcher demotes this bucket to the unfused route"
+            return [Finding(
+                rule="vmem-budget", loc=loc, message=detail,
+                severity="warning" if demotable else "error",
+                fixit="shrink n_chains / block size, or keep the bucket on "
+                      "the unfused route",
+            )]
+        if total > PRESSURE_FRACTION * budget:
+            return [Finding(rule="vmem-pressure", loc=loc, message=detail)]
+        return []
+
+
+def bn_group_envelope(graph) -> tuple[int, int, int]:
+    """(c_max, f_max, s_max) of `build_fused_rounds`' padded envelope,
+    re-derived without compiling: DSATUR over the IR's (moral) adjacency
+    for the group sizes, structural maxima for the factor/scope dims."""
+    adj = graph.adjacency()
+    colors = coloring_mod.dsatur(adj)
+    evid = {node for node, _ in graph.evidence}
+    c_max = 0
+    if len(colors):
+        for c in range(int(colors.max()) + 1):
+            group = [v for v in np.where(colors == c)[0] if v not in evid]
+            c_max = max(c_max, len(group))
+    bn = graph.source
+    n_children = np.zeros(graph.n_nodes, np.int64)
+    for j, ps in enumerate(bn.parents):
+        for p in ps:
+            n_children[p] += 1
+    f_max = int(n_children.max() + 1) if graph.n_nodes else 0
+    s_max = max((len(ps) + 1 for ps in bn.parents), default=0)
+    return c_max, f_max, s_max
+
+
+def _bn_arena_size(bn) -> int:
+    # flat log-CPT arena: dummy entry 0 + every CPT flattened
+    return 1 + sum(int(np.prod(np.shape(cpt))) for cpt in bn.cpts)
+
+
+def _ky_words(v: int, sampler: str, precision: int = 16,
+              max_retries: int = 8) -> int:
+    # mirrors fused_gibbs_sweep's precision widening + word-count math
+    weight_bits = 8 if sampler == "lut_ky" else 15
+    precision = max(precision, weight_bits + max(v - 1, 1).bit_length() + 1)
+    return -(-(precision * max_retries) // 32)
+
+
+def bn_fused_footprint(
+    graph, n_chains: int, sampler: str = "lut_ky"
+) -> KernelFootprint:
+    """Estimate `fused_gibbs_sweep`'s per-core VMEM residency for one
+    model at one chain width (the batcher vmaps buckets over query lanes,
+    which batches the *grid*, so per-step residency stays one lane's)."""
+    b = int(n_chains)
+    n = graph.n_nodes
+    c, f, s = bn_group_envelope(graph)
+    v = max(graph.cards) if graph.cards else 0
+    w = _ky_words(v, sampler)
+    arena = _bn_arena_size(graph.source)
+    inputs = {
+        "value_block": 2 * b * n,  # vals_ref + resident out_ref
+        "round_tensors": 2 * c + c * f + 3 * c * f * s,
+        "random_words": b * c * w,
+        "cpt_arena": arena,
+        "exp_lut": EXP_LUT_SIZE,
+    }
+    inter = {
+        "scope_vals": b * c * f * s,
+        "val_or_v": b * c * f * s * v,  # the dominant candidate tensor
+        "gather_addr": b * c * f * v,
+        "gather_read": b * c * f * v,
+        "logp": 3 * b * c * v,  # logp + flat + z
+        "ky_weights": 3 * b * c * KY_LANES,  # w + m_ext + walk state
+        "scatter": c * n + b * n,
+    }
+    breakdown = {k: x * ITEM_BYTES for k, x in {**inputs, **inter}.items()}
+    return KernelFootprint(
+        kernel="bn_fused", model=graph.name, n_chains=b, sampler=sampler,
+        input_bytes=sum(inputs.values()) * ITEM_BYTES,
+        intermediate_bytes=sum(inter.values()) * ITEM_BYTES,
+        breakdown=breakdown,
+    )
+
+
+def mrf_fused_footprint(
+    graph, n_chains: int, sampler: str = "lut_ky", block_h: int = 32
+) -> KernelFootprint:
+    """Estimate `mrf_half_step_kernel`'s residency for one model.  Chains
+    (and bucket lanes) are vmapped over the kernel, which batches the
+    *grid* — grid steps execute sequentially, so per-step residency is one
+    chain's (block_h, W) tile regardless of `n_chains` (kept in the record
+    for the fit-cache key and the report)."""
+    b = int(n_chains)
+    mrf = graph.source
+    height, width = int(mrf.height), int(mrf.width)
+    bh = min(block_h, height)
+    v = int(mrf.n_labels)
+    sites = bh * width
+    w = _ky_words(v, sampler)
+    inputs = {
+        "label_blocks": 4 * sites,  # prev/cur/next halo blocks + out
+        "evidence_block": sites,
+        "random_words": sites * w,
+        "exp_lut": EXP_LUT_SIZE,
+    }
+    inter = {
+        "neighbor_shifts": 4 * sites,
+        "energies": (2 * v + 1) * sites,  # energies + z columns + e_max
+        "ky_weights": 3 * sites * KY_LANES,  # w + m_ext + walk state
+    }
+    breakdown = {k: x * ITEM_BYTES for k, x in {**inputs, **inter}.items()}
+    return KernelFootprint(
+        kernel="mrf_fused", model=graph.name, n_chains=b, sampler=sampler,
+        input_bytes=sum(inputs.values()) * ITEM_BYTES,
+        intermediate_bytes=sum(inter.values()) * ITEM_BYTES,
+        breakdown=breakdown,
+    )
+
+
+def estimate_footprint(
+    graph, n_chains: int, sampler: str = "lut_ky"
+) -> KernelFootprint:
+    if graph.kind == "bn":
+        return bn_fused_footprint(graph, n_chains, sampler)
+    return mrf_fused_footprint(graph, n_chains, sampler)
+
+
+# fit verdicts memoized by content hash — bucket_key calls this per query,
+# so the steady-state cost must be a dict hit, not a DSATUR run
+_FIT_CACHE: dict[tuple, bool] = {}
+
+
+def fused_fits(graph, n_chains: int, sampler: str = "lut_ky") -> bool:
+    """Demotion oracle for `runtime.batcher.fused_eligible`: does this
+    (model, chain width, sampler) bucket fit the fused kernel's VMEM
+    budget?  False means "route unfused" — bit-exact, just slower —
+    instead of OOMing on device."""
+    key = (graph.ir_key, int(n_chains), sampler, _VMEM_BUDGET)
+    hit = _FIT_CACHE.get(key)
+    if hit is None:
+        fp = estimate_footprint(graph, n_chains, sampler)
+        hit = fp.total_bytes <= _VMEM_BUDGET
+        _FIT_CACHE[key] = hit
+    return hit
+
+
+def lint_kernels(
+    graphs, n_chains: int = 32, sampler: str = "lut_ky",
+    budget: int | None = None, demotable: bool = True,
+) -> list[Finding]:
+    """Footprint findings for a set of IRs — the CLI/CI entry point."""
+    out: list[Finding] = []
+    for g in graphs:
+        out.extend(
+            estimate_footprint(g, n_chains, sampler).findings(
+                budget, demotable=demotable
+            )
+        )
+    return out

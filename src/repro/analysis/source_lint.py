@@ -1,0 +1,219 @@
+"""Repo-convention AST lint — the standing-maintenance rules, enforced.
+
+Four rules, each encoding a convention this repo already follows by hand
+(ROADMAP "standing maintenance") and has been burned by before:
+
+  * ``compat-import`` — `jax.experimental.*` / `jax.shard_map` APIs are
+    version-unstable; every use must route through `core/compat.py`'s
+    shims (the only exempt file) so the repo runs on both the pinned
+    0.4.x container toolchain and current JAX.
+  * ``wallclock-in-sim`` — the serving runtime is a *deterministic
+    simulation*; a wall-clock read inside the engine event loop, the
+    batcher, or the tracer's virtual-clock half silently breaks replay
+    determinism.  The legitimate wall-metric sites carry a
+    `# lint: allow[wallclock-in-sim]` pragma.
+  * ``pyrandom-in-jit`` — Python-level RNG (`random.*`,
+    `np.random.*`) inside a jit/vmap-decorated body executes at trace
+    time: the "random" draw is frozen into the compiled program.
+  * ``bare-assert`` — `assert` guarding a compile-pipeline invariant is
+    stripped under `python -O`; those checks must be raised
+    (`ScheduleVerificationError` or ValueError), not asserted.
+
+Suppression: a ``# lint: allow[rule-id]`` comment on the offending line
+or the line directly above silences that rule at that site — an explicit,
+grep-able exemption rather than a config file.
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+import re
+
+from repro.analysis import Finding
+
+# Deterministic-simulation modules: wall-clock reads here break replay.
+# (calibrate.py measures real time by design; compile/ and launch/ record
+# offline timing diagnostics — neither is in the sim loop.)
+SIM_FILES = (
+    "runtime/engine.py",
+    "runtime/executor.py",
+    "runtime/batcher.py",
+    "obs/tracer.py",
+)
+
+# Compile-pipeline + kernel files where a stripped assert means a silent
+# correctness hole (races, bad lowerings, exhausted random bits).
+PIPELINE_FILES = ("compile/", "kernels/", "core/bayesnet.py", "core/ky.py")
+
+# The one file allowed to touch version-unstable JAX APIs directly.
+COMPAT_FILE = "core/compat.py"
+
+WALLCLOCK_CALLS = {
+    ("time", "time"), ("time", "perf_counter"), ("time", "monotonic"),
+    ("time", "perf_counter_ns"), ("time", "monotonic_ns"),
+    ("datetime", "now"), ("datetime", "utcnow"),
+}
+
+_ALLOW_RE = re.compile(r"#\s*lint:\s*allow\[([a-z0-9-]+)\]")
+
+
+def _allowed(lines: list[str], lineno: int, rule: str) -> bool:
+    """Pragma check: `# lint: allow[rule]` on the line or the line above."""
+    for ln in (lineno, lineno - 1):
+        if 1 <= ln <= len(lines):
+            m = _ALLOW_RE.search(lines[ln - 1])
+            if m and m.group(1) == rule:
+                return True
+    return False
+
+
+def _dotted(node: ast.AST) -> str:
+    """Best-effort dotted name of an attribute/name chain ('' if dynamic)."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _is_jit_decorator(dec: ast.AST) -> bool:
+    """jax.jit / jax.vmap / pmap, bare or wrapped in functools.partial."""
+    target = dec.func if isinstance(dec, ast.Call) else dec
+    name = _dotted(target)
+    if name.endswith(("jax.jit", "jax.vmap", "jax.pmap")) or name in (
+        "jit", "vmap", "pmap"
+    ):
+        return True
+    if isinstance(dec, ast.Call) and name.endswith("partial"):
+        return any(_is_jit_decorator(a) for a in dec.args)
+    return False
+
+
+class _Linter(ast.NodeVisitor):
+    def __init__(self, rel: str, lines: list[str]):
+        self.rel = rel
+        self.lines = lines
+        self.findings: list[Finding] = []
+        self.in_sim = any(rel.endswith(s) for s in SIM_FILES)
+        self.in_pipeline = any(
+            (rel.endswith(s) if s.endswith(".py") else f"/{s}" in f"/{rel}")
+            for s in PIPELINE_FILES
+        )
+        self.is_compat = rel.endswith(COMPAT_FILE)
+        self._jit_depth = 0
+
+    def _emit(self, rule: str, node: ast.AST, message: str, fixit: str = ""):
+        if _allowed(self.lines, node.lineno, rule):
+            return
+        self.findings.append(Finding(
+            rule=rule, loc=f"{self.rel}:{node.lineno}",
+            message=message, fixit=fixit,
+        ))
+
+    # -- compat-import ------------------------------------------------------
+
+    def _check_unstable_import(self, module: str, node: ast.AST):
+        if self.is_compat:
+            return
+        if module.startswith("jax.experimental") or module == "jax.shard_map":
+            self._emit(
+                "compat-import", node,
+                f"direct import of {module!r} (version-unstable API)",
+                fixit="route through a core/compat.py shim "
+                      "(compat.pallas(), compat.shard_map(), ...)",
+            )
+
+    def visit_Import(self, node: ast.Import):
+        for alias in node.names:
+            self._check_unstable_import(alias.name, node)
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom):
+        mod = node.module or ""
+        self._check_unstable_import(mod, node)
+        if mod == "jax" and not self.is_compat:
+            for alias in node.names:
+                if alias.name == "shard_map":
+                    self._emit(
+                        "compat-import", node,
+                        "direct import of jax.shard_map "
+                        "(renamed across JAX versions)",
+                        fixit="use core/compat.py's shard_map()",
+                    )
+        self.generic_visit(node)
+
+    # -- function bodies: jit context tracking ------------------------------
+
+    def _visit_func(self, node):
+        jitted = any(_is_jit_decorator(d) for d in node.decorator_list)
+        self._jit_depth += jitted
+        self.generic_visit(node)
+        self._jit_depth -= jitted
+
+    visit_FunctionDef = _visit_func
+    visit_AsyncFunctionDef = _visit_func
+
+    # -- calls: wall clock + python RNG -------------------------------------
+
+    def visit_Call(self, node: ast.Call):
+        name = _dotted(node.func)
+        parts = tuple(name.rsplit(".", 2)[-2:]) if "." in name else ()
+        if self.in_sim and parts in WALLCLOCK_CALLS:
+            self._emit(
+                "wallclock-in-sim", node,
+                f"{name}() inside a deterministic-simulation module",
+                fixit="use the simulated clock, or annotate a genuine "
+                      "wall-metric site with `# lint: allow[wallclock-in-sim]`",
+            )
+        if self._jit_depth and (
+            name.startswith(("random.", "np.random.", "numpy.random."))
+        ):
+            self._emit(
+                "pyrandom-in-jit", node,
+                f"{name}() inside a jit/vmap-decorated body runs at trace "
+                "time (the draw is frozen into the compiled program)",
+                fixit="thread a jax.random key instead",
+            )
+        self.generic_visit(node)
+
+    # -- bare asserts in pipeline files -------------------------------------
+
+    def visit_Assert(self, node: ast.Assert):
+        if self.in_pipeline:
+            self._emit(
+                "bare-assert", node,
+                "bare `assert` guarding a pipeline/kernel invariant is "
+                "stripped under `python -O`",
+                fixit="raise ScheduleVerificationError / ValueError instead",
+            )
+        self.generic_visit(node)
+
+
+def lint_file(path, root=None) -> list[Finding]:
+    """Lint one Python source file; `root` anchors the reported path."""
+    path = pathlib.Path(path)
+    rel = str(path.relative_to(root) if root else path)
+    text = path.read_text()
+    try:
+        tree = ast.parse(text, filename=str(path))
+    except SyntaxError as e:
+        return [Finding(
+            rule="bare-assert", loc=f"{rel}:{e.lineno or 0}",
+            message=f"file does not parse: {e.msg}", severity="error",
+        )]
+    linter = _Linter(rel, text.splitlines())
+    linter.visit(tree)
+    return sorted(linter.findings, key=lambda f: f.loc)
+
+
+def lint_repo(root) -> list[Finding]:
+    """Lint every `.py` under `root` (typically `src/repro`)."""
+    root = pathlib.Path(root)
+    out: list[Finding] = []
+    for path in sorted(root.rglob("*.py")):
+        out.extend(lint_file(path, root=root.parent))
+    return out

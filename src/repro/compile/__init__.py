@@ -30,9 +30,11 @@ from repro.compile.backend import (
     run_mrf_schedule,
 )
 from repro.compile.ir import SamplingGraph, canonicalize
+from repro.analysis.verify import ScheduleVerificationError
 from repro.compile.passes import (
     MergeSmallColorsPass,
     PassContext,
+    VerifyPass,
     default_pipeline,
     named_pipeline,
     run_pipeline,
@@ -70,6 +72,8 @@ __all__ = [
     "canonicalize",
     "MergeSmallColorsPass",
     "PassContext",
+    "ScheduleVerificationError",
+    "VerifyPass",
     "default_pipeline",
     "named_pipeline",
     "run_pipeline",

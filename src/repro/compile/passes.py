@@ -1,4 +1,4 @@
-"""Pass pipeline: `moralize -> dsatur -> greedy_map -> schedule` (Fig. 8).
+"""Pass pipeline: `moralize -> dsatur -> greedy_map -> schedule -> verify`.
 
 Each pass is a named, timed transformation over a `PassContext`; the context
 accumulates the artifacts (conflict graph, colors, placement, schedule) and
@@ -20,6 +20,7 @@ from typing import Callable, Sequence
 
 import numpy as np
 
+from repro.analysis import verify as verify_mod
 from repro.compile import schedule as schedule_mod
 from repro.compile.ir import SamplingGraph
 from repro.core import coloring as coloring_mod
@@ -92,7 +93,9 @@ class DsaturPass(Pass):
     def run(self, ctx: PassContext) -> None:
         ctx.require("adj")
         ctx.colors = coloring_mod.dsatur(ctx.adj)
-        assert coloring_mod.verify_coloring(ctx.adj, ctx.colors)
+        verify_mod.require_proper_coloring(
+            ctx.adj, ctx.colors, loc=f"{ctx.ir.name}:dsatur"
+        )
         stats = coloring_mod.color_stats(ctx.colors)
         ctx.diagnostics.update(
             n_colors=stats["n_colors"],
@@ -157,7 +160,9 @@ class MergeSmallColorsPass(Pass):
         for c in range(n_before):
             for v in sorted(members.get(c, ())):
                 colors[v] = relabel.setdefault(c, len(relabel))
-        assert coloring_mod.verify_coloring(ctx.adj, colors)
+        verify_mod.require_proper_coloring(
+            ctx.adj, colors, loc=f"{ctx.ir.name}:merge_small_colors"
+        )
         ctx.colors = colors
         stats = coloring_mod.color_stats(colors)
         ctx.diagnostics.update(
@@ -213,7 +218,6 @@ class SchedulePass(Pass):
         ctx.schedule = schedule_mod.build_schedule(
             ctx.ir, ctx.colors, ctx.placement, adj=ctx.adj
         )
-        schedule_mod.verify_schedule(ctx.ir, ctx.schedule, adj=ctx.adj)
         ctx.diagnostics["schedule_cost"] = ctx.schedule.cost()
         # placement quality at a glance: the worst per-core node count of
         # any round (what compute_cycles charges) vs the balanced ideal
@@ -229,8 +233,39 @@ class SchedulePass(Pass):
         )
 
 
+class VerifyPass(Pass):
+    """Static verification of the lowered artifact (`repro.analysis`): the
+    parallel-Gibbs race check, comm completeness against an independently
+    recomputed traffic matrix, placement/core_load legality, clamp/pin
+    consistency, and cost-model reconciliation.  Runs by default as the
+    last stage of every named pipeline; raises a structured
+    `ScheduleVerificationError` on any error-severity finding (an
+    explicit raise — it survives `python -O`, unlike the asserts it
+    replaced).  Warning-severity findings (load imbalance, spurious comm)
+    land in `diagnostics["verify"]` instead of failing the compile."""
+
+    name = "verify"
+
+    def run(self, ctx: PassContext) -> None:
+        ctx.require("adj", "colors", "placement", "schedule")
+        findings = verify_mod.verify_schedule_static(
+            ctx.ir, ctx.schedule,
+            placement=ctx.placement, diagnostics=ctx.diagnostics,
+            adj=ctx.adj, model=ctx.ir.name,
+        )
+        verify_mod.raise_on_errors(findings)
+        ctx.diagnostics["verify"] = {
+            "n_rules": len(verify_mod.VERIFY_RULES),
+            "n_findings": len(findings),
+            "warnings": [f.render() for f in findings],
+        }
+
+
 def default_pipeline() -> list[Pass]:
-    return [MoralizePass(), DsaturPass(), GreedyMapPass(), SchedulePass()]
+    return [
+        MoralizePass(), DsaturPass(), GreedyMapPass(), SchedulePass(),
+        VerifyPass(),
+    ]
 
 
 def runtime_pipeline() -> list[Pass]:
@@ -242,7 +277,7 @@ def runtime_pipeline() -> list[Pass]:
     stays bit-comparable with default-compiled programs."""
     return [
         MoralizePass(), DsaturPass(), MergeSmallColorsPass(),
-        GreedyMapPass(), SchedulePass(),
+        GreedyMapPass(), SchedulePass(), VerifyPass(),
     ]
 
 
@@ -250,7 +285,10 @@ def random_baseline_pipeline(seed: int = 0) -> list[Pass]:
     """The Fig. 9 baseline: the default lowering with the greedy placement
     swapped for a seeded random one.  Kept here so benchmarks/tests compare
     against the real pipeline even as passes are added."""
-    return [MoralizePass(), DsaturPass(), RandomMapPass(seed), SchedulePass()]
+    return [
+        MoralizePass(), DsaturPass(), RandomMapPass(seed), SchedulePass(),
+        VerifyPass(),
+    ]
 
 
 # Named pipelines are the cacheable ones: `compile_graph(pipeline=...)` keys

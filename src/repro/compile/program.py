@@ -40,6 +40,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import Finding
+from repro.analysis import verify as verify_mod
 from repro.compile import backend as backend_mod
 from repro.compile import ir as ir_mod
 from repro.compile import passes as passes_mod
@@ -80,7 +82,8 @@ class CompiledProgram:
 
     @property
     def mrf(self) -> GridMRF:
-        assert self.kind == "mrf"
+        if self.kind != "mrf":
+            raise TypeError(f"program compiled for kind={self.kind!r}")
         return self.ir.source
 
     def schedule_executable(self):
@@ -111,7 +114,8 @@ class CompiledProgram:
         match the eager engine bit for bit before `fused=True` ever serves
         this program with this sampler.  Cached per sampler — the check
         runs once, the guarantee holds for the program's lifetime."""
-        assert self.kind == "bn"
+        if self.kind != "bn":
+            raise TypeError(f"fused BN path on kind={self.kind!r} program")
         if sampler in self._fused_checked:
             return
         with tracer.span(
@@ -378,9 +382,25 @@ def _compile_uncached(
         )
         # cross-check the two lowerings: schedule rounds must be exactly
         # the backend's color groups, else "bit-exact" would be a lie
-        assert len(cbn.groups) == len(ctx.schedule.rounds)
+        # (raised, not asserted: this must hold under `python -O` too)
+        if len(cbn.groups) != len(ctx.schedule.rounds):
+            raise verify_mod.ScheduleVerificationError([Finding(
+                rule="coverage", loc=f"{graph.name}:lowering",
+                message=(
+                    f"backend built {len(cbn.groups)} color groups but the "
+                    f"schedule has {len(ctx.schedule.rounds)} rounds"
+                ),
+            )])
         for g, r in zip(cbn.groups, ctx.schedule.rounds):
-            assert tuple(int(v) for v in np.asarray(g.nodes)) == r.nodes
+            if tuple(int(v) for v in np.asarray(g.nodes)) != r.nodes:
+                raise verify_mod.ScheduleVerificationError([Finding(
+                    rule="coverage", loc=f"{graph.name}:round {r.color}",
+                    message=(
+                        "backend color group and schedule round disagree on "
+                        "node membership; the two lowerings would not be "
+                        "bit-exact"
+                    ),
+                )])
     diagnostics = dict(ctx.diagnostics)
     diagnostics["pass_times_s"] = dict(ctx.pass_times_s)
     diagnostics["pipeline"] = pipeline

@@ -168,24 +168,17 @@ def verify_schedule(
     adj: list[set[int]] | None = None,
 ) -> None:
     """Legality: rounds partition the free RVs, and no round contains two
-    adjacent RVs (the conditional-independence precondition of Alg. 2)."""
-    if adj is None:
-        adj = ir.adjacency()
-    evid = {node for node, _ in ir.evidence}
-    seen: set[int] = set()
-    for r in schedule.rounds:
-        in_round = set(r.nodes)
-        if in_round & seen:
-            raise AssertionError(f"round {r.color}: node scheduled twice")
-        seen |= in_round
-        for u in r.nodes:
-            bad = adj[u] & in_round
-            if bad:
-                raise AssertionError(
-                    f"round {r.color}: adjacent RVs {u} and {bad} together"
-                )
-    free = set(range(ir.n_nodes)) - evid
-    if seen != free:
-        raise AssertionError(
-            f"schedule covers {len(seen)} nodes, expected {len(free)}"
-        )
+    adjacent RVs (the conditional-independence precondition of Alg. 2).
+
+    Delegates to the static verifier's legality rules and raises a
+    structured `repro.analysis.ScheduleVerificationError` (an
+    `AssertionError` subclass, but *raised*, so it survives `python -O`).
+    The full rule set — comm completeness, placement legality, cost-model
+    sanity — runs in the pipeline's `VerifyPass` and in
+    `analysis.verify_program`, which also see the placement and
+    diagnostics this signature does not carry."""
+    from repro.analysis import verify as verify_mod  # analysis imports us
+
+    verify_mod.raise_on_errors(
+        verify_mod.verify_schedule_static(ir, schedule, adj=adj)
+    )

@@ -174,7 +174,13 @@ def compile_bayesnet(
     n = bn.n_nodes
     if colors is None:
         colors = coloring_mod.dsatur(bn.moral_adjacency())
-    assert coloring_mod.verify_coloring(bn.moral_adjacency(), colors)
+    # raised, not asserted: a bad imported coloring is the parallel-Gibbs
+    # race condition, and that check must survive `python -O`
+    from repro.analysis import verify as verify_mod
+
+    verify_mod.require_proper_coloring(
+        bn.moral_adjacency(), colors, loc=f"{bn.name}:compile_bayesnet"
+    )
 
     # flat log-CPT arena; entry 0 is the dummy used by padded factor slots
     bases = cpt_bases(bn)

@@ -46,6 +46,16 @@ def make_mesh(shape, axes) -> jax.sharding.Mesh:
     return jax.make_mesh(tuple(shape), tuple(axes), **kwargs)
 
 
+def pallas():
+    """The `jax.experimental.pallas` module — the single import point for
+    the Pallas API, so version churn (experimental namespace moves, as
+    already happened to shard_map) lands here and not in four kernels.
+    Kernels bind it at module import: `pl = compat.pallas()`."""
+    from jax.experimental import pallas as pl
+
+    return pl
+
+
 def tpu_compiler_params(**kwargs):
     """`pltpu.CompilerParams` (new name) / `pltpu.TPUCompilerParams` (old)."""
     from jax.experimental.pallas import tpu as pltpu

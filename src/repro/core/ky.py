@@ -194,7 +194,13 @@ def ky_sample_ref(
     """
     m_ext = prepare(weights, precision)
     total_steps = precision * max_retries
-    assert words.shape[-1] * 32 >= total_steps, "not enough random bits"
+    if words.shape[-1] * 32 < total_steps:
+        # raised, not asserted: a stripped check here would let the walk
+        # read past the random stream and silently bias the draw
+        raise ValueError(
+            f"not enough random bits: {words.shape[-1]} words < "
+            f"{total_steps} steps"
+        )
 
     def body(t, st):
         return walk_step(m_ext, bit_at(words, t), st, n_bins, precision)
@@ -226,7 +232,13 @@ def ky_sample_fast(
     analogue of the hardware FSM's data-dependent latency."""
     m_ext = prepare(weights, precision)
     total_steps = precision * max_retries
-    assert words.shape[-1] * 32 >= total_steps, "not enough random bits"
+    if words.shape[-1] * 32 < total_steps:
+        # raised, not asserted (see ky_sample_ref): shape check runs at
+        # trace time, so a plain ValueError is jit-safe
+        raise ValueError(
+            f"not enough random bits: {words.shape[-1]} words < "
+            f"{total_steps} steps"
+        )
 
     def cond(carry):
         t, st = carry

@@ -36,7 +36,6 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
 
 from repro.core import compat
 from repro.core import ky as ky_core
@@ -44,6 +43,8 @@ from repro.core.bayesnet import NEG_INF, CompiledBayesNet
 from repro.kernels.interp_lut import interp_eval
 from repro.kernels.ky_sampler import LANES, argmax_fallback, ddg_walk, \
     preprocess_lanes
+
+pl = compat.pallas()
 
 # The samplers whose draw pipeline this kernel implements; anything else
 # must be rejected loudly by the callers (never silently fall back).
@@ -252,7 +253,11 @@ def fused_gibbs_sweep(
     check_fused_sampler(sampler)
     b, n = vals.shape
     v = cbn.max_card
-    assert v < LANES, "pad wider alphabets hierarchically (token_sampler)"
+    if v >= LANES:  # raised, not asserted: must hold under `python -O`
+        raise ValueError(
+            f"max_card {v} >= {LANES} KY lanes; pad wider alphabets "
+            "hierarchically (token_sampler)"
+        )
     weight_bits = 8 if sampler == "lut_ky" else 15
     # match draw_from_logits' precision widening for the weight-sum bound
     precision = max(precision, weight_bits + (v - 1).bit_length() + 1)

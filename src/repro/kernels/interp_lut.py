@@ -13,10 +13,11 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
 
 from repro.core import compat
 from repro.core.interp import LUTSpec
+
+pl = compat.pallas()
 
 DEFAULT_BLOCK_M = 256
 
@@ -60,7 +61,10 @@ def interp_kernel(
     a time with the table block broadcast to every grid step (VMEM-resident,
     the private-RF analogue)."""
     m, n = x.shape
-    assert n % 128 == 0, "pad the lane axis to 128 (use ops.interp)"
+    if n % 128 != 0:  # raised, not asserted: must hold under `python -O`
+        raise ValueError(
+            f"lane axis {n} not a multiple of 128; pad it (use ops.interp)"
+        )
     block_m = min(block_m, m)
     grid = (pl.cdiv(m, block_m),)
     kernel = functools.partial(

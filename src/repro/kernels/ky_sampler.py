@@ -30,9 +30,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
 
 from repro.core import compat
+
+pl = compat.pallas()
 
 LANES = 128
 DEFAULT_BLOCK_B = 256
@@ -170,11 +171,21 @@ def ky_sample_kernel(
 
     Returns (labels (B,), stats dict) — bit-exact vs core.ky.ky_sample_ref.
     """
-    assert weights.shape[-1] == LANES, "pad bins to 128 lanes (ops.ky_sample)"
-    assert n_bins < LANES, "need a free lane for the rejection bin"
+    # raised, not asserted: these must hold under `python -O` too — a
+    # stripped bits check would let the walk read past the random stream
+    if weights.shape[-1] != LANES:
+        raise ValueError(
+            f"weights have {weights.shape[-1]} lanes; pad bins to {LANES} "
+            "(ops.ky_sample)"
+        )
+    if n_bins >= LANES:
+        raise ValueError(f"n_bins {n_bins} needs a free rejection lane")
     b, n_words = words.shape[0], words.shape[1]
     total_steps = precision * max_retries
-    assert n_words * 32 >= total_steps, "not enough random bits"
+    if n_words * 32 < total_steps:
+        raise ValueError(
+            f"not enough random bits: {n_words} words < {total_steps} steps"
+        )
     block_b = min(block_b, b)
     grid = (pl.cdiv(b, block_b),)
 

@@ -22,7 +22,6 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
 
 from repro.core import compat
 from repro.core import ky as ky_core
@@ -30,6 +29,8 @@ from repro.core.interp import LUTSpec
 from repro.kernels.interp_lut import interp_eval
 from repro.kernels.ky_sampler import LANES, argmax_fallback, ddg_walk, \
     preprocess_lanes
+
+pl = compat.pallas()
 
 DEFAULT_BLOCK_H = 32
 
@@ -126,12 +127,21 @@ def mrf_half_step_kernel(
     """labels, evidence: (H, W) int32; words: (H, W * n_words) uint32 (row-
     major (H, W, n_words) flattened); exp_table: (1, L) f32 weight table."""
     height, width = labels.shape
-    assert n_labels < LANES
+    # raised, not asserted: shape gates must hold under `python -O` too
+    if n_labels >= LANES:
+        raise ValueError(f"n_labels {n_labels} >= {LANES} KY lanes")
     block_h = min(block_h, height)
-    assert height % block_h == 0, "pad H to a multiple of block_h"
+    if height % block_h != 0:
+        raise ValueError(
+            f"height {height} not a multiple of block_h {block_h}; pad H"
+        )
     n_blocks = height // block_h
     total_steps = precision * max_retries
-    assert words.shape == (height, width * (-(-total_steps // 32)))
+    want_words = (height, width * (-(-total_steps // 32)))
+    if words.shape != want_words:
+        raise ValueError(
+            f"random words shaped {words.shape}, kernel needs {want_words}"
+        )
 
     kernel = functools.partial(
         _mrf_kernel, parity=parity, theta=theta, h=h, n_labels=n_labels,

@@ -53,7 +53,11 @@ def ky_sample(
     hierarchical path).  Returns labels (B,) int32 [, stats].
     """
     b, n_bins = weights.shape
-    assert n_bins < LANES, "KY kernel handles <=127 bins; see token_sampler"
+    if n_bins >= LANES:  # raised, not asserted: must hold under `python -O`
+        raise ValueError(
+            f"KY kernel handles <={LANES - 1} bins, got {n_bins}; "
+            "see token_sampler"
+        )
     wpad = _pad_axis(weights.astype(jnp.int32), 1, LANES)
     n_words = -(-precision * max_retries // 32)
     words = ky_core.random_words(key, (b,), n_words)

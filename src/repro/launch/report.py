@@ -156,6 +156,26 @@ def runtime_table(recs: list[dict]) -> str:
     return "\n".join(rows)
 
 
+def verification_table(rows: list[dict]) -> str:
+    """Static-verification sweep view (`python -m repro.analysis`): one row
+    per (model, pipeline) with the rules run, findings raised, round count,
+    and verifier wall time — the summary the CLI prints above its findings
+    and the CI job archives alongside the JSON report."""
+    out = [
+        "| model | kind | pipeline | nodes | rounds | rules | findings | "
+        "verify |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        status = str(r["n_findings"]) if r["n_findings"] else "clean"
+        out.append(
+            f"| {r['model']} | {r['kind']} | {r['pipeline']} "
+            f"| {r['n_nodes']} | {r['n_rounds']} | {r['n_rules']} "
+            f"| {status} | {_fmt_s(r['verify_s'])} |"
+        )
+    return "\n".join(out)
+
+
 def attribution_table(rows: list[dict]) -> str:
     """Predicted-vs-measured cost attribution (`repro.obs.attrib`): one row
     per schedule round with its modeled compute/comm cycles, its share of

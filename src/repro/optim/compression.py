@@ -14,6 +14,11 @@ Two mechanisms, both honest about what actually moves over the wire:
 Both are pure functions usable inside `shard_map` bodies; the trainer wires
 them in for the replicated-parameter (non-FSDP) configuration where the DP
 all-reduce is explicit and under our control.
+
+Repo convention (enforced by `repro.analysis.source_lint`): this module
+sticks to stable `jax.lax` collectives — anything from `jax.experimental`
+(pallas, shard_map entry points, TPU compiler params) must route through
+`core/compat.py` so version churn lands in one file.
 """
 
 from __future__ import annotations

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import kernel_lint
 from repro.compile import backend as backend_mod
 from repro.core import mrf as mrf_mod
 from repro.obs import tracer
@@ -34,18 +35,34 @@ from repro.kernels.bn_gibbs import FUSED_BN_SAMPLERS
 PAD_SIZES = (1, 2, 4, 8, 16, 32)
 
 
-def fused_eligible(kind: str, sampler: str, backend: str) -> bool:
+def fused_eligible(
+    kind: str, sampler: str, backend: str,
+    graph=None, n_chains: int | None = None,
+) -> bool:
     """Whether a bucket's static signature can route onto the fused Pallas
     executables: schedule backend + a sampler the kernels implement (BN:
     lut_ky/exact_ky; MRF: lut_ky).  Eligibility is decided here — per
     bucket, from statics alone — so an engine with `fused=True` serves
     eligible buckets fused and the rest unfused, instead of rejecting
-    mixed traffic the way the single-program `run(fused=True)` API does."""
+    mixed traffic the way the single-program `run(fused=True)` API does.
+
+    With `graph` and `n_chains` (the `bucket_key` route supplies both),
+    eligibility additionally requires the static VMEM estimate to fit the
+    budget (`analysis.kernel_lint.fused_fits`): an oversized bucket —
+    wide replica × deep chain width — is demoted to the unfused route
+    here, on estimate, instead of OOMing on device at dispatch.  The
+    verdict is memoized per (ir_key, n_chains, sampler, budget), so the
+    steady-state per-query cost is a dict hit."""
     if backend != "schedule":
         return False
     if kind == "bn":
-        return sampler in FUSED_BN_SAMPLERS
-    return sampler == "lut_ky"
+        if sampler not in FUSED_BN_SAMPLERS:
+            return False
+    elif sampler != "lut_ky":
+        return False
+    if graph is not None and n_chains is not None:
+        return kernel_lint.fused_fits(graph, n_chains, sampler)
+    return True
 
 
 @dataclasses.dataclass
@@ -163,7 +180,10 @@ def bucket_key(
         sampler=query.sampler,
         backend=backend,
         resumed=query.carry is not None,
-        fused=fused and fused_eligible(graph.kind, query.sampler, backend),
+        fused=fused and fused_eligible(
+            graph.kind, query.sampler, backend,
+            graph=graph, n_chains=query.n_chains,
+        ),
     )
 
 

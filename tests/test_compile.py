@@ -110,7 +110,7 @@ def test_pipeline_deterministic():
     )
     assert c1.schedule == c2.schedule
     assert set(c1.pass_times_s) == {
-        "moralize", "dsatur", "greedy_map", "schedule"
+        "moralize", "dsatur", "greedy_map", "schedule", "verify"
     }
 
 

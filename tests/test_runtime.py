@@ -254,6 +254,7 @@ def test_merge_pass_determinism():
 def test_named_pipeline_registry():
     assert [p.name for p in named_pipeline("runtime")] == [
         "moralize", "dsatur", "merge_small_colors", "greedy_map", "schedule",
+        "verify",
     ]
     with pytest.raises(ValueError):
         named_pipeline("bogus")
