@@ -1,0 +1,253 @@
+"""Perf + sampling-quality regression gate against the recorded baseline.
+
+    python benchmarks/check_regression.py            # full gate
+    python benchmarks/check_regression.py --quick    # CI budget
+    python benchmarks/check_regression.py --format json --out gate.json
+    python benchmarks/check_regression.py --skip-perf   # quality only
+
+Re-measures the current tree and diffs it against
+``benchmarks/results/BENCH_BASELINE.json`` (written by ``run.py`` full
+passes) with per-metric tolerances:
+
+  * **perf** — reruns the smoke benchmark suites (one discarded warmup
+    pass first, so first-time XLA compiles aren't charged to the suite
+    the way they never are in a full-pass baseline) and compares each
+    row's ``us_per_call`` to the baseline row of the same name; a row
+    fails when
+    ``current > baseline * --perf-tol + --perf-slack-us`` (default 2x +
+    500us: wall noise on shared CI boxes is real, order-of-magnitude
+    regressions are what the gate exists to catch).  Rows below the slack
+    floor in the baseline are timer noise and are skipped.
+  * **quality** — reruns the ``repro.diag`` sweep at the same CI budget
+    the baseline's quality rows were measured under and gates each
+    (model, variant) row: split R-hat may rise at most ``--rhat-tol``
+    above baseline, TV-vs-exact at most ``--tv-tol`` above, and ESS may
+    fall at most ``--ess-frac`` below.  Same seed + same budget means
+    same-machine reruns reproduce the baseline bit-for-bit, so the
+    tolerances only absorb cross-machine RNG-free numeric drift.
+
+Failures are error-severity findings (``diag-perf-regression`` /
+``diag-quality-regression`` from the `repro.analysis` catalog); exit
+status is nonzero iff any — the CI contract.  Baseline rows the current
+run didn't measure (and vice versa) are listed in the report meta, never
+silently dropped.  A schema-1 baseline (pre-quality) skips the quality
+side with a warning note; regenerate via a full ``run.py`` pass.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from repro.analysis import Finding, Report
+
+BASELINE_PATH = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "results",
+    "BENCH_BASELINE.json",
+)
+
+# perf gate reruns only the fast CPU-friendly suites (run.py SMOKE_SUITES):
+# the gate must be cheap enough to run on every PR
+PERF_SUITES = ("coloring", "compile")
+
+DEFAULT_PERF_TOL = 2.0
+DEFAULT_PERF_SLACK_US = 500.0
+DEFAULT_RHAT_TOL = 0.05
+DEFAULT_TV_TOL = 0.01
+DEFAULT_ESS_FRAC = 0.3
+
+
+def check_perf(baseline: dict, report: Report, *, suites=PERF_SUITES,
+               tol=DEFAULT_PERF_TOL, slack_us=DEFAULT_PERF_SLACK_US,
+               warmup=True) -> None:
+    from benchmarks import run as run_mod
+
+    quick = bool(baseline.get("quick"))
+    base_rows = {
+        r["name"]: r
+        for s in suites
+        for r in baseline.get("suites", {}).get(s, [])
+    }
+    cur_rows = {}
+    for s in suites:
+        if warmup:
+            # the baseline comes from a *full* run.py pass, where earlier
+            # suites have already paid every first-time XLA compile; a
+            # fresh gate process measuring cold would charge those
+            # compiles to the suite (observed ~80x on compile_cold_ms).
+            # One discarded warmup pass makes the second comparable.
+            run_mod.SUITES[s](quick=quick)
+        for row in run_mod.SUITES[s](quick=quick) or []:
+            rec = run_mod.parse_row(row)
+            cur_rows[rec["name"]] = rec
+    compared = 0
+    for name, cur in cur_rows.items():
+        base = base_rows.get(name)
+        if base is None or base["us_per_call"] < slack_us:
+            continue
+        compared += 1
+        limit = base["us_per_call"] * tol + slack_us
+        row = {
+            "name": name,
+            "baseline_us": base["us_per_call"],
+            "current_us": cur["us_per_call"],
+            "limit_us": round(limit, 1),
+            "ok": cur["us_per_call"] <= limit,
+        }
+        report.meta["perf_rows"].append(row)
+        if not row["ok"]:
+            report.extend([Finding(
+                "diag-perf-regression", f"bench:{name}",
+                f"{cur['us_per_call']:.1f}us vs baseline "
+                f"{base['us_per_call']:.1f}us (limit {limit:.1f}us = "
+                f"{tol}x + {slack_us:.0f}us slack)",
+                fixit="profile the suite; if the slowdown is intended, "
+                      "regenerate the baseline with benchmarks/run.py",
+            )])
+    report.meta["perf_missing"] = sorted(
+        set(base_rows) - set(cur_rows)
+    )
+    report.meta["perf_new"] = sorted(set(cur_rows) - set(base_rows))
+    report.meta["perf_compared"] = compared
+
+
+def check_quality(baseline: dict, report: Report, *, quick=False,
+                  rhat_tol=DEFAULT_RHAT_TOL, tv_tol=DEFAULT_TV_TOL,
+                  ess_frac=DEFAULT_ESS_FRAC) -> None:
+    from repro.diag.__main__ import (QUICK_BURN_IN, QUICK_N_ITERS,
+                                     quality_sweep)
+
+    base_rows = {
+        (r["model"], r["variant"]): r for r in baseline.get("quality", [])
+    }
+    if not base_rows:
+        report.meta["quality_note"] = (
+            "baseline has no quality rows (schema<2 or --skip-quality); "
+            "regenerate it with a full benchmarks/run.py pass"
+        )
+        return
+    models = sorted({m for m, _ in base_rows})
+    if quick:
+        models = models[:1]
+    sweep = quality_sweep(
+        tuple(models), n_iters=QUICK_N_ITERS, burn_in=QUICK_BURN_IN,
+    )
+    compared = 0
+    for cur in sweep.meta["rows"]:
+        base = base_rows.get((cur["model"], cur["variant"]))
+        if base is None:
+            continue
+        compared += 1
+        loc = f"{cur['model']}/{cur['variant']}"
+        checks = []
+        if base.get("rhat_max") is not None and cur["rhat_max"] is not None:
+            limit = base["rhat_max"] + rhat_tol
+            checks.append(("rhat_max", cur["rhat_max"], limit,
+                           cur["rhat_max"] <= limit))
+        if base.get("tv_max") is not None and cur["tv_max"] is not None:
+            limit = base["tv_max"] + tv_tol
+            checks.append(("tv_max", cur["tv_max"], limit,
+                           cur["tv_max"] <= limit))
+        if base.get("ess_min") is not None and cur["ess_min"] is not None:
+            limit = base["ess_min"] * (1.0 - ess_frac)
+            checks.append(("ess_min", cur["ess_min"], limit,
+                           cur["ess_min"] >= limit))
+        report.meta["quality_rows"].append({
+            "model": cur["model"], "variant": cur["variant"],
+            "checks": [
+                {"metric": m, "current": c, "limit": round(lim, 4), "ok": ok}
+                for m, c, lim, ok in checks
+            ],
+        })
+        for metric, curval, limit, ok in checks:
+            if not ok:
+                report.extend([Finding(
+                    "diag-quality-regression", loc,
+                    f"{metric} {curval:.4f} breaches baseline-relative "
+                    f"limit {limit:.4f}",
+                    fixit="bisect the sampling/schedule change; if the "
+                          "shift is intended, regenerate the baseline",
+                )])
+    report.meta["quality_missing"] = sorted(
+        f"{m}/{v}" for (m, v) in base_rows
+        if (m, v) not in {(r["model"], r["variant"])
+                          for r in sweep.meta["rows"]}
+        and (not quick or m in models)
+    )
+    report.meta["quality_compared"] = compared
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python benchmarks/check_regression.py",
+        description="perf + sampling-quality regression gate vs "
+                    "BENCH_BASELINE.json",
+    )
+    ap.add_argument("--baseline", default=BASELINE_PATH)
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--out", help="also write the JSON report to this path")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI budget: first baseline quality model only")
+    ap.add_argument("--skip-perf", action="store_true")
+    ap.add_argument("--skip-quality", action="store_true")
+    ap.add_argument("--perf-tol", type=float, default=DEFAULT_PERF_TOL)
+    ap.add_argument("--perf-slack-us", type=float,
+                    default=DEFAULT_PERF_SLACK_US)
+    ap.add_argument("--rhat-tol", type=float, default=DEFAULT_RHAT_TOL)
+    ap.add_argument("--tv-tol", type=float, default=DEFAULT_TV_TOL)
+    ap.add_argument("--ess-frac", type=float, default=DEFAULT_ESS_FRAC)
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.baseline):
+        print(f"no baseline at {args.baseline}; run benchmarks/run.py first",
+              file=sys.stderr)
+        return 2
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    report = Report(meta={
+        "baseline": os.path.relpath(args.baseline),
+        "baseline_sha": baseline.get("git_sha", "unknown"),
+        "baseline_created": baseline.get("created_utc"),
+        "perf_rows": [],
+        "quality_rows": [],
+    })
+    if not args.skip_perf:
+        check_perf(baseline, report, tol=args.perf_tol,
+                   slack_us=args.perf_slack_us)
+    if not args.skip_quality:
+        check_quality(baseline, report, quick=args.quick,
+                      rhat_tol=args.rhat_tol, tv_tol=args.tv_tol,
+                      ess_frac=args.ess_frac)
+
+    if args.out:
+        pathlib.Path(args.out).write_text(report.to_json())
+    if args.format == "json":
+        print(report.to_json())
+    else:
+        for r in report.meta["perf_rows"]:
+            mark = "ok" if r["ok"] else "FAIL"
+            print(f"perf  {mark:4} {r['name']}: {r['current_us']:.1f}us "
+                  f"(baseline {r['baseline_us']:.1f}us, "
+                  f"limit {r['limit_us']:.1f}us)")
+        for r in report.meta["quality_rows"]:
+            for c in r["checks"]:
+                mark = "ok" if c["ok"] else "FAIL"
+                print(f"qual  {mark:4} {r['model']}/{r['variant']} "
+                      f"{c['metric']}: {c['current']:.4f} "
+                      f"(limit {c['limit']:.4f})")
+        if report.meta.get("quality_note"):
+            print(f"note: {report.meta['quality_note']}")
+        print(report.render_text())
+    return report.exit_code
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -2,12 +2,18 @@
 
 Prints ``name,us_per_call,derived`` CSV rows and, when every suite ran,
 writes the pass to ``benchmarks/results/BENCH_BASELINE.json`` — the
-machine-readable perf trajectory: each PR's full run snapshots every
-suite's rows plus the backend and budget they were measured under, so
-later PRs can diff themselves against a recorded baseline instead of
-folklore (partial ``--smoke``/``--only`` passes leave it untouched).
-``--quick`` trims budgets; ``--fused`` routes the bayesnet/compile suites
-through the fused Pallas kernels as well; ``--roofline`` additionally
+machine-readable perf+quality baseline: each PR's full run snapshots
+every suite's rows, a sampling-quality sweep (``repro.diag`` at the CI
+budget — split R-hat / ESS / TV-vs-exact per model and backend variant),
+the git SHA it was measured at, and the backend and budget flags, so
+later PRs can diff themselves against a recorded baseline
+(``benchmarks/check_regression.py``) instead of folklore.  Partial
+``--smoke``/``--only`` passes leave the baseline untouched.  Every
+baseline write also appends a timestamped copy to
+``benchmarks/results/trajectory/`` — the per-PR history the snapshots
+overwrite.  ``--quick`` trims budgets; ``--fused`` routes the
+bayesnet/compile suites through the fused Pallas kernels as well;
+``--skip-quality`` omits the quality sweep; ``--roofline`` additionally
 summarizes the dry-run roofline table (requires
 benchmarks/results/dryrun/*.json from repro.launch.dryrun)."""
 
@@ -51,6 +57,47 @@ BASELINE_PATH = os.path.join(
     os.path.dirname(os.path.abspath(__file__)), "results",
     "BENCH_BASELINE.json",
 )
+TRAJECTORY_DIR = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "results", "trajectory",
+)
+
+
+def git_sha() -> str:
+    """HEAD SHA of the repo the benchmarks live in, or "unknown" outside
+    a checkout — stamped into every baseline so a trajectory entry names
+    the exact code it measured."""
+    import subprocess
+
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10,
+        )
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else "unknown"
+    except OSError:
+        return "unknown"
+
+
+def quality_rows(quick: bool) -> list[dict]:
+    """The sampling-quality side of the baseline: the `repro.diag` sweep
+    at the CI (--quick) budget — one row per (model, variant) with
+    rhat_max / ess_min / tv_max — so the regression gate can diff quality
+    alongside us_per_call.  Full (non-quick) benchmark passes still use
+    the quick *quality* budget: the gate needs stable, cheap reference
+    numbers, not the deepest possible audit."""
+    from repro.diag.__main__ import (QUICK_BURN_IN, QUICK_N_ITERS,
+                                     quality_sweep)
+
+    report = quality_sweep(
+        ("survey",) if quick else ("survey", "alarm"),
+        n_iters=QUICK_N_ITERS,
+        burn_in=QUICK_BURN_IN,
+    )
+    for f in report.findings:
+        print(f"# quality finding: {f.render()}")
+    return report.meta["rows"]
 
 
 def parse_row(row: str) -> dict:
@@ -80,8 +127,9 @@ def write_baseline(suite_rows: dict, args) -> None:
                   f"(quick={prev.get('quick')}, fused={prev.get('fused')}): "
                   f"writing {os.path.relpath(path)} instead")
     record = {
-        "schema": 1,
+        "schema": 2,
         "created_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "git_sha": git_sha(),
         "backend": __import__("jax").default_backend(),
         "jax": __import__("jax").__version__,
         "quick": bool(args.quick),
@@ -91,12 +139,27 @@ def write_baseline(suite_rows: dict, args) -> None:
             name: [parse_row(r) for r in rows]
             for name, rows in suite_rows.items()
         },
+        "quality": (
+            [] if args.skip_quality else quality_rows(bool(args.quick))
+        ),
     }
     os.makedirs(os.path.dirname(path), exist_ok=True)
     with open(path, "w") as f:
         json.dump(record, f, indent=1)
     print(f"# wrote {os.path.relpath(path)} "
-          f"({sum(len(v) for v in record['suites'].values())} rows)")
+          f"({sum(len(v) for v in record['suites'].values())} rows, "
+          f"{len(record['quality'])} quality rows)")
+    # every baseline write also appends to the trajectory history: the
+    # baseline file is a snapshot (each PR overwrites it), the trajectory
+    # is the record of how the numbers moved PR over PR
+    os.makedirs(TRAJECTORY_DIR, exist_ok=True)
+    stamp = record["created_utc"].replace(":", "").replace("-", "")
+    traj = os.path.join(
+        TRAJECTORY_DIR, f"{stamp}__{record['git_sha'][:12]}.json"
+    )
+    with open(traj, "w") as f:
+        json.dump(record, f, indent=1)
+    print(f"# appended {os.path.relpath(traj)}")
 
 
 def roofline_summary():
@@ -134,6 +197,9 @@ def main() -> None:
                     help="route the bayesnet/compile suites through the "
                          "fused Pallas round kernels as well")
     ap.add_argument("--roofline", action="store_true")
+    ap.add_argument("--skip-quality", action="store_true",
+                    help="omit the sampling-quality sweep from the "
+                         "baseline snapshot")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="runtime suite: also write a traced bursty-pass "
                          "snapshot (Perfetto JSON + .jsonl + .attrib.json) "

@@ -115,6 +115,34 @@ RULES: dict[str, tuple[str, str]] = {
         "the fused kernel's estimated VMEM footprint exceeds 75% of the "
         "budget",
     ),
+    # -- sampling-quality diagnostics (repro.diag, python -m repro.diag) ----
+    "diag-threshold-breach": (
+        "error",
+        "a run's sampling-quality diagnostic (split R-hat, TV-vs-exact "
+        "marginal error, ESS floor) breached its threshold — the posterior "
+        "is not converged/faithful at this budget",
+    ),
+    "diag-oracle-unavailable": (
+        "warning",
+        "the exact-inference oracle is intractable for this model "
+        "(min-fill VE cost above the limit); marginal error went unaudited, "
+        "not silently passed",
+    ),
+    "diag-accum-overflow": (
+        "error",
+        "the quality accumulator's kept-draw count approached the int32/"
+        "float32 exactness headroom (statistics no longer trustworthy)",
+    ),
+    "diag-perf-regression": (
+        "error",
+        "a benchmark's wall time regressed beyond tolerance against "
+        "BENCH_BASELINE.json",
+    ),
+    "diag-quality-regression": (
+        "error",
+        "a benchmark's sampling-quality metric (R-hat / TV / ESS) "
+        "regressed beyond tolerance against BENCH_BASELINE.json",
+    ),
     # -- repo-convention AST lint (analysis/source_lint.py) -----------------
     "compat-import": (
         "error",

@@ -40,6 +40,7 @@ from repro.core import bayesnet as bnet
 from repro.core import mrf as mrf_mod
 from repro.core.graphs import GridMRF
 from repro.core.interp import build_exp_weight_lut
+from repro.diag import accum as diag_accum
 from repro.kernels import mrf_gibbs as mrf_kernels
 from repro.kernels.bn_gibbs import FUSED_BN_SAMPLERS, check_fused_sampler
 from repro.obs import tracer
@@ -183,6 +184,7 @@ def bn_rounds_core(
     cbn, round_groups, key, *, n_chains, n_iters, burn_in, sampler, thin=1,
     clamp_vals=None, clamp_mask=None, carry=None, return_state=False,
     fused=False, interpret=False,
+    diag_total=None, diag_batch=diag_accum.DEFAULT_BATCH_LEN,
 ):
     """Un-jitted BN round sweep: init (with optional runtime clamps) + the
     shared `gibbs_run_loop`.  `run_bn_schedule` jits it; the serving batcher
@@ -207,6 +209,7 @@ def bn_rounds_core(
         cbn, round_groups, vals, key, n_iters, burn_in, sampler, thin,
         carry=carry, return_state=return_state,
         fused=fused, interpret=interpret,
+        diag_total=diag_total, diag_batch=diag_batch,
     )
 
 
@@ -224,6 +227,7 @@ def _run_bn_rounds(
     cbn, round_groups, key, clamp_vals, clamp_mask, carry, *,
     n_chains, n_iters, burn_in, sampler, thin, return_state,
     fused=False, interpret=False,
+    diag_total=None, diag_batch=diag_accum.DEFAULT_BATCH_LEN,
 ):
     return bn_rounds_core(
         cbn, round_groups, key, n_chains=n_chains, n_iters=n_iters,
@@ -231,6 +235,7 @@ def _run_bn_rounds(
         clamp_vals=clamp_vals, clamp_mask=clamp_mask,
         carry=carry, return_state=return_state,
         fused=fused, interpret=interpret,
+        diag_total=diag_total, diag_batch=diag_batch,
     )
 
 
@@ -268,6 +273,8 @@ def bn_run_clamped(
     carry=None,
     return_state: bool = False,
     fused: bool = False,
+    diag_total=None,
+    diag_batch: int = diag_accum.DEFAULT_BATCH_LEN,
 ):
     """Execute an already-specialized clamped grouping (from
     `CompiledProgram.clamped_executable`, either backend's) with per-query
@@ -292,6 +299,7 @@ def bn_run_clamped(
             n_chains=n_chains, n_iters=n_iters, burn_in=burn_in,
             sampler=sampler, thin=thin, return_state=return_state,
             fused=fused, interpret=interpret,
+            diag_total=diag_total, diag_batch=diag_batch,
         )
 
 
@@ -303,6 +311,7 @@ def bn_run_clamped(
 def mrf_rounds_core(
     mrf, parities, evidence, key, *, n_chains, n_iters, sampler, fused,
     interpret, pin_mask=None, pin_vals=None, carry=None, return_state=False,
+    diag_total=None, diag_batch=diag_accum.DEFAULT_BATCH_LEN,
 ):
     """Un-jitted schedule-ordered MRF sweep (the batcher vmaps this over
     per-query evidence images and pin masks — pins are runtime arrays, so
@@ -320,11 +329,17 @@ def mrf_rounds_core(
         labels, key = mrf_mod.init_labels(
             mrf, key, n_chains, pin_mask, pin_vals
         )
+        quality = None
+        if diag_total is not None:
+            quality = diag_accum.make_accum(
+                n_chains, mrf.height * mrf.width, mrf.n_labels,
+                jnp.asarray(diag_total, jnp.int32), diag_batch,
+            )
     else:
-        labels, key = carry.labels, carry.key
+        labels, key, quality = carry.labels, carry.key, carry.quality
 
     def body(t, carry):
-        labels, key = carry
+        labels, key, quality = carry
         ks = jax.random.split(key, 1 + len(parities))
         for i, parity in enumerate(parities):
             if fused:
@@ -339,11 +354,21 @@ def mrf_rounds_core(
                     mrf, labels, evidence, ks[1 + i], parity, sampler,
                     exp_table, exp_spec, pin_mask,
                 )
-        return labels, ks[0]
+        if quality is not None:
+            onehot = (
+                labels.reshape(labels.shape[0], -1)[..., None]
+                == jnp.arange(mrf.n_labels, dtype=labels.dtype)
+            ).astype(jnp.int32)
+            quality = diag_accum.update(quality, onehot, jnp.asarray(True))
+        return labels, ks[0], quality
 
-    labels, key = jax.lax.fori_loop(0, n_iters, body, (labels, key))
+    labels, key, quality = jax.lax.fori_loop(
+        0, n_iters, body, (labels, key, quality)
+    )
     if return_state:
-        return labels, mrf_mod.MRFChainState(labels=labels, key=key)
+        return labels, mrf_mod.MRFChainState(
+            labels=labels, key=key, quality=quality
+        )
     return labels
 
 
@@ -360,12 +385,14 @@ def mrf_rounds_core(
 def _run_mrf_rounds(
     mrf, parities, evidence, key, pin_mask, pin_vals, carry, *,
     n_chains, n_iters, sampler, fused, interpret, return_state,
+    diag_total=None, diag_batch=diag_accum.DEFAULT_BATCH_LEN,
 ):
     return mrf_rounds_core(
         mrf, parities, evidence, key, n_chains=n_chains, n_iters=n_iters,
         sampler=sampler, fused=fused, interpret=interpret,
         pin_mask=pin_mask, pin_vals=pin_vals,
         carry=carry, return_state=return_state,
+        diag_total=diag_total, diag_batch=diag_batch,
     )
 
 
@@ -382,6 +409,8 @@ def run_mrf_schedule(
     pin_vals: jax.Array | None = None,
     carry=None,
     return_state: bool = False,
+    diag_total=None,
+    diag_batch: int = diag_accum.DEFAULT_BATCH_LEN,
 ):
     """Execute a lowered MRF schedule; same contract as `mrf.run_mrf_gibbs`
     (returns final labels (B, H, W)).
@@ -412,6 +441,7 @@ def run_mrf_schedule(
             ex.mrf, ex.parities, evidence, key, pin_mask, pin_vals, carry,
             n_chains=n_chains, n_iters=n_iters, sampler=sampler, fused=fused,
             interpret=interpret, return_state=return_state,
+            diag_total=diag_total, diag_batch=diag_batch,
         )
 
 

@@ -193,6 +193,23 @@ class CompiledProgram:
         nodes = tuple(sorted(int(k) for k in evidence))
         return nodes, jnp.asarray(vals, jnp.int32), jnp.asarray(mask)
 
+    def _summarize_quality(self, state, free_mask=None, total_kept=None):
+        """Host-side reduction of a run's quality accumulator ->
+        `diag.accum.QualitySnapshot` (clamped nodes masked out of the
+        R-hat/ESS rollups via `free_mask`)."""
+        from repro.diag import accum as diag_accum
+
+        if state.quality is None:
+            raise ValueError(
+                "chain state carries no quality accumulator; resume a run "
+                "that was started with diagnostics=True"
+            )
+        cards = np.asarray(self.cbn.cards) if self.kind == "bn" else None
+        return diag_accum.summarize(
+            state.quality, cards=cards, free_mask=free_mask,
+            total_kept=total_kept,
+        )
+
     def run(
         self,
         key: jax.Array | None,
@@ -208,6 +225,7 @@ class CompiledProgram:
         fused: bool = False,
         carry_state=None,
         return_state: bool = False,
+        diagnostics: bool = False,
     ):
         """Single-device jitted execution.
 
@@ -236,7 +254,18 @@ class CompiledProgram:
         *more* sweeps (then `key` is ignored and may be None).  A run sliced
         at any boundaries is bit-exact with the uninterrupted run, provided
         each slice repeats the same static arguments (burn_in, thin,
-        sampler, backend, evidence/pins)."""
+        sampler, backend, evidence/pins).
+
+        `diagnostics=True` threads the streaming quality accumulator
+        (`repro.diag.accum`) through the run and appends a
+        `diag.accum.QualitySnapshot` (split-chain R-hat, batch-means ESS,
+        pooled per-node marginals) to the return value: BN runs return
+        (marginals, vals, snapshot[, state]), MRF runs (labels, snapshot
+        [, state]).  The accumulator is pure jax riding on the chain-state
+        carry — the draw stream (and therefore marginals/vals/labels) is
+        bit-identical with diagnostics off.  Resuming with `carry_state=`
+        requires the original run to have been started with
+        diagnostics=True (the accumulator lives in the state)."""
         if backend not in ("eager", "schedule"):
             raise ValueError(f"unknown backend {backend!r}")
         if fused and backend != "schedule":
@@ -245,6 +274,19 @@ class CompiledProgram:
             raise ValueError(f"thin must be >= 1, got {thin}")
         if carry_state is None and key is None:
             raise ValueError("a fresh run (carry_state=None) needs a PRNG key")
+        diag_total = None
+        if diagnostics:
+            if carry_state is None:
+                # the accumulator's split point is fixed from this call's
+                # full budget; resumed slices ignore diag_total entirely
+                diag_total = jnp.asarray(n_iters, jnp.int32)
+            elif getattr(carry_state, "quality", None) is None:
+                raise ValueError(
+                    "diagnostics=True on a resumed run needs a carry from a "
+                    "run that was itself started with diagnostics=True (the "
+                    "accumulator lives in the chain state)"
+                )
+        inner_state = return_state or diagnostics
         if self.kind == "bn":
             if carry_state is not None and not isinstance(
                 carry_state, bnet.BNChainState
@@ -262,28 +304,44 @@ class CompiledProgram:
                 backend_mod.check_fused_sampler(sampler)
                 self.ensure_fused_cross_check(sampler)
             burn_in = 50 if burn_in is None else burn_in
+            free_mask = None
             if evidence is not None:
                 nodes, ev_vals, ev_mask = self._bn_clamp_arrays(evidence)
+                free_mask = ~np.asarray(ev_mask)
                 groups = self.clamped_executable(nodes, backend)
-                return backend_mod.bn_run_clamped(
+                out = backend_mod.bn_run_clamped(
                     self.cbn, groups, ev_vals, ev_mask, key,
                     n_chains=n_chains, n_iters=n_iters, burn_in=burn_in,
                     sampler=sampler, thin=thin,
-                    carry=carry_state, return_state=return_state,
-                    fused=fused,
+                    carry=carry_state, return_state=inner_state,
+                    fused=fused, diag_total=diag_total,
                 )
-            if backend == "schedule":
-                return backend_mod.run_bn_schedule(
+            elif backend == "schedule":
+                out = backend_mod.run_bn_schedule(
                     self.schedule_executable(), key, n_chains=n_chains,
                     n_iters=n_iters, burn_in=burn_in, sampler=sampler,
-                    thin=thin, carry=carry_state, return_state=return_state,
-                    fused=fused,
+                    thin=thin, carry=carry_state, return_state=inner_state,
+                    fused=fused, diag_total=diag_total,
                 )
-            return bnet.run_gibbs(
-                self.cbn, key, n_chains=n_chains, n_iters=n_iters,
-                burn_in=burn_in, sampler=sampler, thin=thin,
-                carry=carry_state, return_state=return_state,
+            else:
+                out = bnet.run_gibbs(
+                    self.cbn, key, n_chains=n_chains, n_iters=n_iters,
+                    burn_in=burn_in, sampler=sampler, thin=thin,
+                    carry=carry_state, return_state=inner_state,
+                    diag_total=diag_total,
+                )
+            if not diagnostics:
+                return out
+            marginals, vals, state = out
+            total_kept = None
+            if carry_state is None:
+                total_kept = max((n_iters - burn_in + thin - 1) // thin, 0)
+            snap = self._summarize_quality(
+                state, free_mask=free_mask, total_kept=total_kept
             )
+            if return_state:
+                return marginals, vals, snap, state
+            return marginals, vals, snap
         if carry_state is not None and not isinstance(
             carry_state, mrf_mod.MRFChainState
         ):
@@ -318,17 +376,35 @@ class CompiledProgram:
                 self.mrf, self.ir.evidence
             )
         if backend == "schedule":
-            return backend_mod.run_mrf_schedule(
+            out = backend_mod.run_mrf_schedule(
                 self.schedule_executable(), evidence, key, n_chains=n_chains,
                 n_iters=n_iters, sampler=sampler, fused=fused,
                 pin_mask=pin_mask, pin_vals=pin_vals,
-                carry=carry_state, return_state=return_state,
+                carry=carry_state, return_state=inner_state,
+                diag_total=diag_total,
             )
-        return mrf_mod.run_mrf_gibbs(
-            self.mrf, evidence, key, n_chains=n_chains, n_iters=n_iters,
-            sampler=sampler, pin_mask=pin_mask, pin_vals=pin_vals,
-            carry=carry_state, return_state=return_state,
+        else:
+            out = mrf_mod.run_mrf_gibbs(
+                self.mrf, evidence, key, n_chains=n_chains, n_iters=n_iters,
+                sampler=sampler, pin_mask=pin_mask, pin_vals=pin_vals,
+                carry=carry_state, return_state=inner_state,
+                diag_total=diag_total,
+            )
+        if not diagnostics:
+            return out
+        labels, state = out
+        free_mask = None
+        if pin_mask is not None:
+            # pinned pixels are constant by construction; keep them out of
+            # the R-hat/ESS rollups like clamped BN nodes
+            free_mask = ~np.asarray(pin_mask).reshape(-1)
+        snap = self._summarize_quality(
+            state, free_mask=free_mask,
+            total_kept=n_iters if carry_state is None else None,
         )
+        if return_state:
+            return labels, snap, state
+        return labels, snap
 
     def run_sharded(
         self,

@@ -48,6 +48,7 @@ from repro.core import ky as ky_core
 from repro.core.draws import SAMPLERS, draw_from_logits
 from repro.core.graphs import DiscreteBayesNet
 from repro.core.interp import LUTSpec, build_exp_weight_lut
+from repro.diag import accum as diag_accum
 
 NEG_INF = -1e30
 
@@ -228,12 +229,20 @@ class BNChainState:
     sliced run bit-identical to an uninterrupted one: the key is split once
     per sweep in sequence, the marginal histogram keeps accumulating, and
     `t` (global sweeps completed) keeps the burn-in/thinning gate aligned
-    with where the chain actually is, not where the current slice started."""
+    with where the chain actually is, not where the current slice started.
+
+    `quality` is the optional streaming quality accumulator
+    (`repro.diag.accum.QualityAccum`) — None (the default, an empty
+    pytree subtree) when diagnostics are off, so every existing jit cache
+    and carry pattern is bit-compatible.  When present it rides the carry
+    exactly like the histogram, which is what makes R-hat/ESS bit-exact
+    across sliced runs."""
 
     vals: jax.Array  # (B, n) int32 current chain states
     key: jax.Array  # PRNG key as of the next sweep
     hist: jax.Array  # (n, V) int32 marginal histogram so far
     t: jax.Array  # () int32 sweeps completed
+    quality: object = None  # diag.accum.QualityAccum | None
 
 
 jax.tree_util.register_dataclass(
@@ -244,7 +253,9 @@ jax.tree_util.register_dataclass(
     ["log_flat", "groups", "cards", "init_vals", "free_mask", "exp_table"],
     ["max_card", "n_nodes", "colors", "exp_spec", "name"],
 )
-jax.tree_util.register_dataclass(BNChainState, ["vals", "key", "hist", "t"], [])
+jax.tree_util.register_dataclass(
+    BNChainState, ["vals", "key", "hist", "t", "quality"], []
+)
 
 
 def group_log_conditionals(
@@ -340,6 +351,8 @@ def gibbs_run_loop(
     return_state: bool = False,
     fused: bool = False,
     interpret: bool = False,
+    diag_total=None,
+    diag_batch: int = diag_accum.DEFAULT_BATCH_LEN,
 ):
     """The iteration loop shared by the eager engine (`groups=cbn.groups`)
     and the schedule-direct backend (`groups` built from `Schedule.rounds`):
@@ -365,7 +378,17 @@ def gibbs_run_loop(
     burn-in/thinning gate tests the carried global sweep count, so a run
     sliced at any boundaries — with the same static burn_in/thin/groups per
     slice — is bit-exact with the uninterrupted run.  `return_state=True`
-    appends the state needed to continue."""
+    appends the state needed to continue.
+
+    `diag_total` (the query's *total* sweep budget — under slicing that is
+    more than this call's `n_iters`) switches the streaming quality
+    accumulator on for a fresh run: a `diag.accum.QualityAccum` joins the
+    carry and ingests the same one-hot tensor the histogram does, masked
+    by the same keep gate — pure jax, no extra randomness, so the draw
+    stream is untouched.  On a resumed carry the accumulator (or its
+    absence) rides in with the state and `diag_total` is ignored — the
+    split point was fixed at creation, which is what makes sliced and
+    unsliced accumulation bit-identical."""
     if fused:
         # lazy import: kernels/bn_gibbs imports this module for NEG_INF
         from repro.kernels import bn_gibbs
@@ -379,11 +402,18 @@ def gibbs_run_loop(
         sweep = lambda v, k: gibbs_sweep(cbn, v, k, sampler, groups)
 
     if carry is None:
+        quality = None
+        if diag_total is not None:
+            quality = diag_accum.make_accum(
+                vals.shape[0], cbn.n_nodes, cbn.max_card,
+                diag_accum.kept_count(diag_total, burn_in, thin), diag_batch,
+            )
         carry = BNChainState(
             vals=vals,
             key=key,
             hist=jnp.zeros((cbn.n_nodes, cbn.max_card), jnp.int32),
             t=jnp.zeros((), jnp.int32),
+            quality=quality,
         )
 
     def body(_, st):
@@ -394,7 +424,12 @@ def gibbs_run_loop(
         ).astype(jnp.int32)
         keep = (st.t >= burn_in) & ((st.t - burn_in) % thin == 0)
         hist = st.hist + jnp.where(keep, onehot.sum(0), 0)
-        return BNChainState(vals=vals, key=key, hist=hist, t=st.t + 1)
+        quality = st.quality
+        if quality is not None:
+            quality = diag_accum.update(quality, onehot, keep)
+        return BNChainState(
+            vals=vals, key=key, hist=hist, t=st.t + 1, quality=quality
+        )
 
     carry = jax.lax.fori_loop(0, n_iters, body, carry)
     card_mask = (
@@ -428,6 +463,8 @@ def run_gibbs(
     thin: int = 1,
     carry: BNChainState | None = None,
     return_state: bool = False,
+    diag_total=None,
+    diag_batch: int = diag_accum.DEFAULT_BATCH_LEN,
 ):
     """Multi-chain chromatic Gibbs; returns (marginals (n, V), final vals).
 
@@ -436,11 +473,13 @@ def run_gibbs(
     iterations, giving every node's marginal at no extra cost (the paper's
     "compute all single marginals without overhead" observation).
 
-    `carry`/`return_state` slice the run: see `gibbs_run_loop`."""
+    `carry`/`return_state` slice the run: see `gibbs_run_loop`
+    (`diag_total`/`diag_batch` switch its quality accumulator on)."""
     vals = None
     if carry is None:
         vals, key = init_chain_values(cbn, key, n_chains)
     return gibbs_run_loop(
         cbn, cbn.groups, vals, key, n_iters, burn_in, sampler, thin,
         carry=carry, return_state=return_state,
+        diag_total=diag_total, diag_batch=diag_batch,
     )

@@ -31,6 +31,7 @@ warnings.filterwarnings(
 from repro.core.draws import draw_from_logits
 from repro.core.graphs import GridMRF
 from repro.core.interp import build_exp_weight_lut
+from repro.diag import accum as diag_accum
 
 
 def neighbor_value_counts(labels: jax.Array, n_labels: int) -> jax.Array:
@@ -116,13 +117,20 @@ class MRFChainState:
     """Resume point for a grid-MRF Gibbs run: carrying (labels, key) across
     `mrf_gibbs_loop` calls makes a sliced run bit-identical to an
     uninterrupted one (the key is split once per iteration in sequence and
-    there is no burn-in/thinning state to realign)."""
+    there is no burn-in/thinning state to realign).
+
+    `quality` optionally carries a `diag.accum.QualityAccum` over the
+    flattened site axis; None stays an empty pytree subtree so existing
+    jit caches and carried states are untouched when diagnostics are off."""
 
     labels: jax.Array  # (B, H, W) int32 current chain states
     key: jax.Array  # PRNG key as of the next iteration
+    quality: object = None  # diag.accum.QualityAccum | None
 
 
-jax.tree_util.register_dataclass(MRFChainState, ["labels", "key"], [])
+jax.tree_util.register_dataclass(
+    MRFChainState, ["labels", "key", "quality"], []
+)
 
 
 def init_labels(
@@ -155,6 +163,8 @@ def mrf_gibbs_loop(
     pin_vals: jax.Array | None = None,
     carry: MRFChainState | None = None,
     return_state: bool = False,
+    diag_total=None,
+    diag_batch: int = diag_accum.DEFAULT_BATCH_LEN,
 ):
     """The eager iteration body shared by `run_mrf_gibbs` and the batched
     serving path (which vmaps it over queries): n_iters x (even half-step,
@@ -163,15 +173,29 @@ def mrf_gibbs_loop(
     `carry` resumes a previous call's `MRFChainState` (then `key` is ignored
     and may be None) and `n_iters` counts *additional* iterations — sliced
     runs are bit-exact with uninterrupted ones.  `return_state=True` returns
-    (labels, state) instead of labels alone."""
+    (labels, state) instead of labels alone.
+
+    `diag_total` (the query's total iteration budget) switches the
+    streaming quality accumulator on for a fresh run: every iteration's
+    post-sweep labels feed a per-site one-hot into `diag.accum.update`
+    (MRF runs have no burn-in/thinning, so every iteration is kept).  The
+    update consumes no randomness — the label stream is bit-identical with
+    diagnostics on.  On a resumed carry the accumulator rides in with the
+    state and `diag_total` is ignored."""
     exp_table, exp_spec = build_exp_weight_lut()
     if carry is None:
         labels, key = init_labels(mrf, key, n_chains, pin_mask, pin_vals)
+        quality = None
+        if diag_total is not None:
+            quality = diag_accum.make_accum(
+                n_chains, mrf.height * mrf.width, mrf.n_labels,
+                jnp.asarray(diag_total, jnp.int32), diag_batch,
+            )
     else:
-        labels, key = carry.labels, carry.key
+        labels, key, quality = carry.labels, carry.key, carry.quality
 
     def body(t, carry):
-        labels, key = carry
+        labels, key, quality = carry
         key, ka, kb = jax.random.split(key, 3)
         labels = half_step(
             mrf, labels, evidence, ka, 0, sampler, exp_table, exp_spec,
@@ -181,11 +205,21 @@ def mrf_gibbs_loop(
             mrf, labels, evidence, kb, 1, sampler, exp_table, exp_spec,
             pin_mask,
         )
-        return labels, key
+        if quality is not None:
+            onehot = (
+                labels.reshape(labels.shape[0], -1)[..., None]
+                == jnp.arange(mrf.n_labels, dtype=labels.dtype)
+            ).astype(jnp.int32)
+            quality = diag_accum.update(
+                quality, onehot, jnp.asarray(True)
+            )
+        return labels, key, quality
 
-    labels, key = jax.lax.fori_loop(0, n_iters, body, (labels, key))
+    labels, key, quality = jax.lax.fori_loop(
+        0, n_iters, body, (labels, key, quality)
+    )
     if return_state:
-        return labels, MRFChainState(labels=labels, key=key)
+        return labels, MRFChainState(labels=labels, key=key, quality=quality)
     return labels
 
 
@@ -207,16 +241,20 @@ def run_mrf_gibbs(
     pin_vals: jax.Array | None = None,
     carry: MRFChainState | None = None,
     return_state: bool = False,
+    diag_total=None,
+    diag_batch: int = diag_accum.DEFAULT_BATCH_LEN,
 ):
     """Full chromatic Gibbs: n_iters x (even half-step, odd half-step).
 
     Returns final labels (B, H, W) — the approximate MPE state for the
     denoising benchmarks (paper Eqn. 4).  `pin_mask`/`pin_vals` ((H, W)
     bool / int32) clamp pixels at known labels for the whole run.
-    `carry`/`return_state` slice the run: see `mrf_gibbs_loop`."""
+    `carry`/`return_state` slice the run: see `mrf_gibbs_loop`
+    (`diag_total`/`diag_batch` switch its quality accumulator on)."""
     return mrf_gibbs_loop(
         mrf, evidence, key, n_chains, n_iters, sampler, pin_mask, pin_vals,
         carry=carry, return_state=return_state,
+        diag_total=diag_total, diag_batch=diag_batch,
     )
 
 

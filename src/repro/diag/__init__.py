@@ -1,0 +1,48 @@
+"""`repro.diag` — streaming sampling-quality observability.
+
+PR 6's `repro.obs` answers *where time goes*; this package answers
+*whether the answers are right* — the other half of the paper's
+samples-per-joule-at-equal-quality claim (Table IV compares MCMC against
+exact inference; the KY quantization is an approximation whose error must
+be watched, not assumed).
+
+  * `diag.accum`  — chain-axis-vectorized streaming accumulators
+    (Welford mean/variance over per-node one-hot marginals, split-chain
+    R-hat, batch-means ESS) that ride inside the Gibbs loops as a
+    pure-jax update on the chain-state carry — no host sync, no extra
+    randomness, carry-over safe under sliced serving.
+  * `diag.oracle` — total-variation / max-abs marginal audits against
+    `core/exact.py` variable elimination where the elimination cost
+    permits (declared "n/a" where it does not), plus the per-node
+    KY-quantization TV floor that attributes error to quantize vs mixing.
+  * `python -m repro.diag` — the quality CLI: sweeps the bench zoo on
+    both backends (fused + unfused), audits against the oracle, writes a
+    quality snapshot, and exits nonzero on R-hat/TV threshold breach
+    using the shared `repro.analysis` Finding/Report schema
+    (`diag-*` rule ids).
+
+Entry points elsewhere: `CompiledProgram.run(diagnostics=True)`,
+`EngineConfig(diagnostics=True)` -> `QueryResult.quality`, the
+`rhat_max`/`ess_min` columns in `runtime.metrics`, and the
+`benchmarks/check_regression.py` perf+quality gate.
+"""
+
+from __future__ import annotations
+
+from repro.diag.accum import (  # noqa: F401
+    DEFAULT_BATCH_LEN,
+    QualityAccum,
+    QualitySnapshot,
+    kept_count,
+    make_accum,
+    summarize,
+    update,
+)
+from repro.diag.oracle import (  # noqa: F401
+    DEFAULT_VE_LIMIT,
+    ky_quantization_tv,
+    oracle_audit,
+    quantized_pmf,
+    ve_cost_estimate,
+    ve_tractable,
+)

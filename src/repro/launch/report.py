@@ -125,13 +125,21 @@ def compile_table(recs: list[dict]) -> str:
     return "\n".join(rows)
 
 
+def _fmt_q(x, spec: str) -> str:
+    return "n/a" if x is None else format(x, spec)
+
+
 def runtime_table(recs: list[dict]) -> str:
     """Serving-runtime view (`benchmarks/bench_runtime.py`): batched engine
-    vs the one-query-at-a-time baseline on the same trace."""
+    vs the one-query-at-a-time baseline on the same trace.  The quality
+    columns (worst split R-hat / smallest ESS over served queries) are
+    populated when the trace ran with engine diagnostics on; older result
+    JSONs without the fields render "n/a"."""
     rows = [
         "| trace | backend | models | queries | mean batch | batched qps | "
-        "serial qps | speedup | hit rate | evict | recompiles | sim p95 |",
-        "|---|---|---|---|---|---|---|---|---|---|---|---|",
+        "serial qps | speedup | hit rate | evict | recompiles | sim p95 | "
+        "rhat max | ess min |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|---|---|",
     ]
     for r in sorted(recs, key=lambda r: (r["trace"], r["backend"])):
         rows.append(
@@ -140,7 +148,9 @@ def runtime_table(recs: list[dict]) -> str:
             f"| {r['batched_qps']:.1f} | {r['serial_qps']:.1f} "
             f"| {r['speedup']:.2f}x | {r['cache_hit_rate']:.3f} "
             f"| {r['cache_evictions']} | {r['recompiles']} "
-            f"| {r['sim_latency_p95_ms']:.2f}ms |"
+            f"| {r['sim_latency_p95_ms']:.2f}ms "
+            f"| {_fmt_q(r.get('rhat_max'), '.3f')} "
+            f"| {_fmt_q(r.get('ess_min'), '.0f')} |"
         )
     g = next((r for r in recs if "workers_speedup" in r), None)
     if g:
@@ -172,6 +182,33 @@ def verification_table(rows: list[dict]) -> str:
             f"| {r['model']} | {r['kind']} | {r['pipeline']} "
             f"| {r['n_nodes']} | {r['n_rounds']} | {r['n_rules']} "
             f"| {status} | {_fmt_s(r['verify_s'])} |"
+        )
+    return "\n".join(out)
+
+
+def quality_table(rows: list[dict]) -> str:
+    """Sampling-quality sweep view (`python -m repro.diag`): one row per
+    (model, backend variant) with the convergence diagnostics (worst split
+    R-hat, smallest per-site ESS), the exact-marginal audit (total-variation
+    and max-abs error vs variable elimination, or "n/a" when the min-fill
+    cost estimate ruled VE intractable), kept-draw count, and sweep wall
+    time.  This is the table the diag CLI prints above its findings and the
+    CI quality job archives next to the JSON snapshot."""
+    out = [
+        "| model | variant | nodes | chains | kept | rhat max | ess min | "
+        "oracle | tv max | maxabs | ky tv | wall |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        out.append(
+            f"| {r['model']} | {r['variant']} | {r['n_nodes']} "
+            f"| {r['n_chains']} | {r['kept']} "
+            f"| {_fmt_q(r.get('rhat_max'), '.4f')} "
+            f"| {_fmt_q(r.get('ess_min'), '.0f')} "
+            f"| {r['oracle']} | {_fmt_q(r.get('tv_max'), '.4f')} "
+            f"| {_fmt_q(r.get('maxabs_max'), '.4f')} "
+            f"| {_fmt_q(r.get('ky_tv'), '.2e')} "
+            f"| {_fmt_s(r['wall_s'])} |"
         )
     return "\n".join(out)
 

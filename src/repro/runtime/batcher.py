@@ -103,6 +103,10 @@ class QueryResult:
     finish_s: float = 0.0
     batch_size: int = 1
     carry: object = None  # chain state, when the bucket ran return_state
+    # diag.accum.QualitySnapshot.brief() of this lane's accumulator, when
+    # the bucket ran with diagnostics (intermediate slices carry the
+    # snapshot as-of-that-slice; the final slice's is the query's verdict)
+    quality: dict | None = None
 
     @property
     def latency_s(self) -> float:
@@ -121,7 +125,10 @@ class BucketKey:
     resumes carried chain state) — they are different jit programs.
     `fused` routes the bucket through the fused Pallas round kernels
     (bit-exact with unfused, but a different jit program — and a different
-    calibration signature, since its service time differs)."""
+    calibration signature, since its service time differs).  `diagnostics`
+    threads the streaming quality accumulator through the bucket (also a
+    different jit program: the chain-state pytree grows the accumulator
+    subtree) — per-lane draw streams stay bit-identical either way."""
 
     program_key: str
     kind: str
@@ -135,11 +142,12 @@ class BucketKey:
     backend: str
     resumed: bool = False
     fused: bool = False
+    diagnostics: bool = False
 
 
 def bucket_key(
     query: Query, graph, backend: str, slice_iters: int | None = None,
-    fused: bool = False,
+    fused: bool = False, diagnostics: bool = False,
 ) -> BucketKey:
     """The bucket a query lands in, derived without compiling anything
     (`graph` is the model's structure-only IR from engine registration).
@@ -184,6 +192,7 @@ def bucket_key(
             graph.kind, query.sampler, backend,
             graph=graph, n_chains=query.n_chains,
         ),
+        diagnostics=diagnostics,
     )
 
 
@@ -221,7 +230,7 @@ def _seed_array(queries) -> jax.Array:
     donate_argnames=("carry_q",),
 )
 def _bn_bucket(
-    cbn, groups, ev_vals_q, ev_mask, seeds_q, carry_q, *,
+    cbn, groups, ev_vals_q, ev_mask, seeds_q, carry_q, totals_q=None, *,
     n_chains, n_iters, burn_in, thin, sampler, return_state,
     fused=False, interpret=False,
 ):
@@ -230,19 +239,29 @@ def _bn_bucket(
     dead lanes and chains resume instead of initializing; fresh buckets
     pass carry_q=None.  Either way the per-lane bits equal the single-query
     path with the same carry/seed — fused buckets included (the Pallas
-    round kernel vmaps like any other jax computation)."""
+    round kernel vmaps like any other jax computation).
 
-    def one(ev_vals, seed, carry):
+    `totals_q` ((Q,) int32, fresh diagnostics buckets only) carries each
+    lane's *total* sweep budget — the accumulator's split point must come
+    from the query's whole budget even when this dispatch runs one slice
+    of it.  Totals are lane data, so lanes with different budgets share
+    the bucket like they always did."""
+
+    def one(ev_vals, seed, carry, diag_total=None):
         return backend_mod.bn_rounds_core(
             cbn, groups, jax.random.key(seed), n_chains=n_chains,
             n_iters=n_iters, burn_in=burn_in, sampler=sampler, thin=thin,
             clamp_vals=ev_vals, clamp_mask=ev_mask,
             carry=carry, return_state=return_state,
-            fused=fused, interpret=interpret,
+            fused=fused, interpret=interpret, diag_total=diag_total,
         )
 
-    if carry_q is None:
+    if carry_q is None and totals_q is None:
         return jax.vmap(lambda e, s: one(e, s, None))(ev_vals_q, seeds_q)
+    if carry_q is None:
+        return jax.vmap(
+            lambda e, s, t: one(e, s, None, t)
+        )(ev_vals_q, seeds_q, totals_q)
     return jax.vmap(one)(ev_vals_q, seeds_q, carry_q)
 
 
@@ -256,24 +275,35 @@ def _bn_bucket(
     donate_argnames=("carry_q",),
 )
 def _mrf_bucket(
-    mrf, parities, imgs_q, seeds_q, pmask_q, pvals_q, carry_q, *,
+    mrf, parities, imgs_q, seeds_q, pmask_q, pvals_q, carry_q,
+    totals_q=None, *,
     n_chains, n_iters, sampler, fused, interpret, eager, return_state,
 ):
-    def one(img, seed, pm, pv, carry):
+    def one(img, seed, pm, pv, carry, diag_total=None):
         key = jax.random.key(seed)
         if eager:
             return mrf_mod.mrf_gibbs_loop(
                 mrf, img, key, n_chains, n_iters, sampler,
                 pin_mask=pm, pin_vals=pv,
                 carry=carry, return_state=return_state,
+                diag_total=diag_total,
             )
         return backend_mod.mrf_rounds_core(
             mrf, parities, img, key, n_chains=n_chains, n_iters=n_iters,
             sampler=sampler, fused=fused, interpret=interpret,
             pin_mask=pm, pin_vals=pv,
             carry=carry, return_state=return_state,
+            diag_total=diag_total,
         )
 
+    if carry_q is None and totals_q is not None:
+        if pmask_q is None:
+            return jax.vmap(
+                lambda i, s, t: one(i, s, None, None, None, t)
+            )(imgs_q, seeds_q, totals_q)
+        return jax.vmap(
+            lambda i, s, pm, pv, t: one(i, s, pm, pv, None, t)
+        )(imgs_q, seeds_q, pmask_q, pvals_q, totals_q)
     if pmask_q is None and carry_q is None:
         return jax.vmap(
             lambda i, s: one(i, s, None, None, None)
@@ -325,12 +355,18 @@ def execute_bucket(
     lane's post-run chain state to its `QueryResult.carry`, which is how
     the engine slices long queries (continuous batching).  Both are
     bit-preserving: a lane resumed here equals the same query resumed
-    standalone, whatever its batch-mates."""
+    standalone, whatever its batch-mates.
+
+    A `diagnostics` bucket additionally threads the streaming quality
+    accumulator through every lane and summarizes it into
+    `QueryResult.quality` (the chain state is requested internally either
+    way, but only attached to `carry` when the caller asked)."""
     n_real = len(queries)
     n_pad = pad_size(n_real, pad_sizes)
     with tracer.span(
         "execute_bucket", cat="batch",
         kind=key.kind, sampler=key.sampler, fused=key.fused,
+        diagnostics=key.diagnostics,
         resumed=key.resumed, n_real=n_real, n_padded=n_pad,
         pad_efficiency=round(n_real / n_pad, 6) if n_pad else 0.0,
         n_iters=key.n_iters, n_chains=key.n_chains,
@@ -340,6 +376,16 @@ def execute_bucket(
         )
 
 
+def _lane_quality(states, i: int, cards=None, free_mask=None) -> dict:
+    """Summarize lane i's quality accumulator into the brief scalar dict."""
+    from repro.diag import accum as diag_accum
+
+    lane = _lane_state(states, i)
+    return diag_accum.summarize(
+        lane.quality, cards=cards, free_mask=free_mask
+    ).brief()
+
+
 def _execute_bucket(
     program, key: BucketKey, queries: list[Query],
     n_real: int, n_pad: int, return_state: bool,
@@ -347,6 +393,15 @@ def _execute_bucket(
     padded = list(queries) + [queries[0]] * (n_pad - n_real)
     seeds_q = _seed_array(padded)
     carry_q = _stack_carries(padded) if key.resumed else None
+    # diagnostics needs the post-run chain state (the accumulator lives
+    # there) even when the caller doesn't want the carry back
+    run_state = return_state or key.diagnostics
+    totals_q = None
+    if key.diagnostics and not key.resumed:
+        # each lane's accumulator splits at its query's *total* budget —
+        # a fresh query's n_iters is that total (the engine rewrites
+        # n_iters only on continuation re-enqueues)
+        totals_q = jnp.asarray([q.n_iters for q in padded], jnp.int32)
     if key.kind == "bn":
         n = program.ir.n_nodes
         ev_mask = np.zeros(n, bool)
@@ -361,20 +416,24 @@ def _execute_bucket(
             program.ensure_fused_cross_check(key.sampler)
         out = _bn_bucket(
             program.cbn, groups, jnp.asarray(ev_vals, jnp.int32),
-            jnp.asarray(ev_mask), seeds_q, carry_q,
+            jnp.asarray(ev_mask), seeds_q, carry_q, totals_q,
             n_chains=key.n_chains, n_iters=key.n_iters, burn_in=key.burn_in,
-            thin=key.thin, sampler=key.sampler, return_state=return_state,
+            thin=key.thin, sampler=key.sampler, return_state=run_state,
             fused=key.fused, interpret=jax.default_backend() != "tpu",
         )
         marg, vals = out[0], out[1]
-        states = out[2] if return_state else None
+        states = out[2] if run_state else None
         marg, vals = np.asarray(marg), np.asarray(vals)
+        cards = np.asarray(program.cbn.cards)
         return [
             QueryResult(
                 qid=q.qid, model=q.model, kind="bn", marginals=marg[i],
                 final_state=vals[i], arrival_s=q.arrival_s,
                 batch_size=n_real,
                 carry=_lane_state(states, i) if return_state else None,
+                quality=_lane_quality(states, i, cards=cards,
+                                      free_mask=~ev_mask)
+                if key.diagnostics else None,
             )
             for i, q in enumerate(queries)
         ]
@@ -396,18 +455,26 @@ def _execute_bucket(
     else:
         parities, eager = (0, 1), True
     out = _mrf_bucket(
-        mrf, parities, imgs, seeds_q, pmask_q, pvals_q, carry_q,
+        mrf, parities, imgs, seeds_q, pmask_q, pvals_q, carry_q, totals_q,
         n_chains=key.n_chains, n_iters=key.n_iters, sampler=key.sampler,
         fused=key.fused, interpret=jax.default_backend() != "tpu",
-        eager=eager, return_state=return_state,
+        eager=eager, return_state=run_state,
     )
-    labels, states = (out if return_state else (out, None))
+    labels, states = (out if run_state else (out, None))
     labels = np.asarray(labels)
+
+    def mrf_free(i):
+        if pmask_q is None:
+            return None
+        return ~np.asarray(pmask_q[i]).reshape(-1)
+
     return [
         QueryResult(
             qid=q.qid, model=q.model, kind="mrf", marginals=None,
             final_state=labels[i], arrival_s=q.arrival_s, batch_size=n_real,
             carry=_lane_state(states, i) if return_state else None,
+            quality=_lane_quality(states, i, free_mask=mrf_free(i))
+            if key.diagnostics else None,
         )
         for i, q in enumerate(queries)
     ]

@@ -62,6 +62,12 @@ class EngineConfig:
     # schedule backend) through the fused Pallas round kernels — bit-exact
     # with unfused, so a pure service-time knob
     fused: bool = False
+    # thread the streaming quality accumulator (repro.diag) through every
+    # bucket: each served query's QueryResult.quality carries its R-hat/ESS
+    # brief, the metrics grow rhat_max/ess_min columns, and the tracer
+    # emits per-query `quality` instants.  Draw streams are bit-identical
+    # either way (the sharded route demotes it — no carry support there)
+    diagnostics: bool = False
     pipeline: str = "runtime"  # pass list incl. merge_small_colors
     mesh_shape: tuple[int, int] = (4, 4)
     window_s: float = 0.002  # microbatch admission window (simulated)
@@ -173,6 +179,7 @@ class Engine:
         return batcher_mod.bucket_key(
             q, self.graphs[q.model], self.config.backend,
             self.config.slice_iters, fused=self.config.fused,
+            diagnostics=self.config.diagnostics,
         )
 
     def _make_calibrator(self) -> Calibrator:
@@ -259,7 +266,7 @@ class Engine:
             "run_start", cat="runtime", sim_t=0.0,
             n_workers=cfg.n_workers, backend=cfg.backend, fused=cfg.fused,
             max_batch=cfg.max_batch, window_s=cfg.window_s,
-            slice_iters=cfg.slice_iters,
+            slice_iters=cfg.slice_iters, diagnostics=cfg.diagnostics,
         )
         # heap entries (arrival_s, qid, seq, query): seq breaks ties between
         # a query's re-arrivals (defers, slice continuations) deterministically
@@ -419,6 +426,13 @@ class Engine:
                     r.carry = None  # slices are internal; results are final
                     results[r.qid] = r
                     done.append(r)
+                    if r.quality is not None and tracer.enabled():
+                        # convergence lands on the timeline next to the
+                        # dispatch lanes that produced it
+                        tracer.instant(
+                            "quality", cat="quality", sim_t=rec.finish_s,
+                            qid=r.qid, model=r.model, **r.quality,
+                        )
             self.metrics.record_queries(done)
             admit()
         # every parked continuation refilled its bucket before the loop

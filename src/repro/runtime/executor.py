@@ -188,12 +188,13 @@ class Executor:
 
     def effective_key(self, key: BucketKey, route: str) -> BucketKey:
         """The key this dispatch *actually* executes under.  The sharded
-        route goes through `run_sharded`, which has no fused path — demote
-        the fused label so metrics and calibration signatures never claim
-        a fused execution that did not happen (and the too-few-devices
-        vmap fallback stays consistent with the sharded leg)."""
-        if route == "sharded" and key.fused:
-            return dataclasses.replace(key, fused=False)
+        route goes through `run_sharded`, which has no fused path and no
+        chain-state carry — demote the fused and diagnostics labels so
+        metrics and calibration signatures never claim an execution mode
+        that did not happen (and the too-few-devices vmap fallback stays
+        consistent with the sharded leg)."""
+        if route == "sharded" and (key.fused or key.diagnostics):
+            return dataclasses.replace(key, fused=False, diagnostics=False)
         return key
 
     def execute(

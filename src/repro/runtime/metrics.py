@@ -127,6 +127,13 @@ class RuntimeMetrics:
             if b.service_src == "measured" and b.measured_s > 0
         ]
         submitted = n + self.sheds
+        # quality roll-ups over served queries that carried a diagnostics
+        # brief (engine diagnostics=True); None when diagnostics were off
+        # or every brief was degenerate
+        qual = [r.quality for r in self.query_records
+                if getattr(r, "quality", None)]
+        rhats = [q["rhat_max"] for q in qual if q.get("rhat_max") is not None]
+        esses = [q["ess_min"] for q in qual if q.get("ess_min") is not None]
         return {
             "n_queries": n,
             "n_batches": len(self.batch_records),
@@ -170,6 +177,9 @@ class RuntimeMetrics:
             "cache_hit_rate": cache["hit_rate"],
             "recompiles": cache["misses"] + clamp_lowerings,
             "clamp_lowerings": clamp_lowerings,
+            "quality_queries": len(qual),
+            "rhat_max": float(max(rhats)) if rhats else None,
+            "ess_min": float(min(esses)) if esses else None,
             "wall_s": self.wall_s,
         }
 
@@ -181,12 +191,14 @@ class RuntimeMetrics:
         mean_batch = (
             "n/a" if s["mean_batch"] is None else f"{s['mean_batch']:.2f}"
         )
+        rhat = "n/a" if s["rhat_max"] is None else f"{s['rhat_max']:.3f}"
+        ess = "n/a" if s["ess_min"] is None else f"{s['ess_min']:.0f}"
         rows = [
             "| queries | batches | mean batch | pad eff | p50 | p95 | "
             "sim qps | workers (util) | stall | shed | defer | maxq | "
-            "hit rate | evict | recompiles | wall |",
+            "hit rate | evict | recompiles | rhat max | ess min | wall |",
             "|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|"
-            "---|",
+            "---|---|---|",
             (
                 f"| {s['n_queries']} | {s['n_batches']} "
                 f"| {mean_batch} | {s['pad_efficiency']:.2f} "
@@ -197,6 +209,7 @@ class RuntimeMetrics:
                 f"| {s['sheds']} | {s['defers']} | {s['max_queue_depth']} "
                 f"| {s['cache_hit_rate']:.3f} "
                 f"| {s['cache_evictions']} | {s['recompiles']} "
+                f"| {rhat} | {ess} "
                 f"| {s['wall_s']:.2f}s |"
             ),
         ]
