@@ -246,15 +246,24 @@ def gate_bursty(quick: bool) -> dict:
             "bursty_sheds": s1["sheds"], "bursty_defers": s1["defers"]}
 
 
-def trace_snapshot(trace_out: str, quick: bool) -> None:
+def trace_snapshot(trace_out: str, quick: bool,
+                   profile_out: str | None = None) -> dict:
     """One traced bursty engine pass: Perfetto timeline + deterministic
     JSONL + attribution sidecar written alongside the BENCH_BASELINE
     artifacts, asserted gap-free (every dispatched program has round
-    costs).  Runs with a cold cache and its own tracer so the snapshot is
-    self-contained; tracing is disabled again before the timed passes'
-    numbers could be affected (the snapshot runs after them)."""
+    costs).  With ``profile_out``, the same pass runs the compiled-
+    artifact profiler: static costs + roofline joined against the
+    dispatch spans (asserted fully attributed) land in profile.json and
+    the sim-clock metrics series next to it.  Runs with a cold cache and
+    its own tracer so the snapshot is self-contained; tracing is disabled
+    again before the timed passes' numbers could be affected (the
+    snapshot runs after them)."""
+    from repro.obs import profile as profile_mod
+
     clear_program_cache()
     obs.enable()
+    if profile_out:
+        profile_mod.enable()
     try:
         models, queries = bursty_trace(60 if quick else 100, quick=True,
                                        seed=8)
@@ -264,9 +273,8 @@ def trace_snapshot(trace_out: str, quick: bool) -> None:
         base = os.path.splitext(trace_out)[0]
         obs.export.write_perfetto(trace_out, events)
         obs.export.write_jsonl(base + ".jsonl", events)
-        rows, gaps = obs.attrib.attribution(
-            obs.export.events_as_dicts(events)
-        )
+        dicts = obs.export.events_as_dicts(events)
+        rows, gaps = obs.attrib.attribution(dicts)
         with open(base + ".attrib.json", "w") as f:
             json.dump({"rows": rows, "gaps": gaps,
                        "n_events": len(events), "dropped": tr.dropped},
@@ -277,12 +285,31 @@ def trace_snapshot(trace_out: str, quick: bool) -> None:
         print(f"[bench_runtime] trace snapshot: {len(events)} events, "
               f"{n_batches} dispatches, {n_spans} attributed rounds "
               f"-> {trace_out}", flush=True)
+        if profile_out:
+            prec = profile_mod.write_profile(
+                profile_out, profile_mod.get(), dicts
+            )
+            eng.metrics.series.write_jsonl(
+                os.path.splitext(profile_out)[0] + ".series.jsonl"
+            )
+            joined = prec["joined"]
+            assert not joined["unattributed"], (
+                "unattributed dispatches in the profile snapshot",
+                joined["unattributed"],
+            )
+            print(f"[bench_runtime] profile snapshot: "
+                  f"{len(prec['buckets'])} executables over "
+                  f"{joined['n_dispatches']} dispatches -> {profile_out}",
+                  flush=True)
+        return {"trace_dropped": tr.dropped}
     finally:
+        if profile_out:
+            profile_mod.disable()
         obs.disable()
 
 
 def run(quick: bool = False, backend: str = "schedule",
-        trace_out: str | None = None):
+        trace_out: str | None = None, profile_out: str | None = None):
     rows = []
     os.makedirs(RESULTS_DIR, exist_ok=True)
     n_queries = 60 if quick else 150
@@ -323,6 +350,10 @@ def run(quick: bool = False, backend: str = "schedule",
         "pad_efficiency": s["pad_efficiency"],
         "sim_latency_p50_ms": s["latency_p50_s"] * 1e3,
         "sim_latency_p95_ms": s["latency_p95_s"] * 1e3,
+        "sim_latency_p99_ms": (
+            s["latency_p99_s"] * 1e3
+            if s["latency_p99_s"] is not None else None
+        ),
         "sim_throughput_qps": s["throughput_qps"],
         "batched_wall_s": batched_wall,
         "batched_qps": batched_qps,
@@ -380,7 +411,10 @@ def run(quick: bool = False, backend: str = "schedule",
         f"bursty_defers={gates['bursty_defers']}",
     ))
     if trace_out:
-        trace_snapshot(trace_out, quick)
+        rec.update(trace_snapshot(trace_out, quick,
+                                  profile_out=profile_out))
+        with open(os.path.join(RESULTS_DIR, "zipf.json"), "w") as f:
+            json.dump(rec, f, indent=1)
     return rows
 
 
@@ -392,5 +426,11 @@ if __name__ == "__main__":
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="also write a traced bursty-pass snapshot: "
                          "Perfetto JSON at PATH plus .jsonl/.attrib.json")
+    ap.add_argument("--profile-out", default=None, metavar="PATH",
+                    help="with --trace-out: also profile the snapshot "
+                         "pass (static HLO costs + roofline joined "
+                         "against dispatch spans) into PATH plus the "
+                         "metrics series (.series.jsonl)")
     args = ap.parse_args()
-    run(quick=args.quick, backend=args.backend, trace_out=args.trace_out)
+    run(quick=args.quick, backend=args.backend, trace_out=args.trace_out,
+        profile_out=args.profile_out)

@@ -25,9 +25,17 @@ passes) with per-metric tolerances:
     fall at most ``--ess-frac`` below.  Same seed + same budget means
     same-machine reruns reproduce the baseline bit-for-bit, so the
     tolerances only absorb cross-machine RNG-free numeric drift.
+  * **static cost** — re-derives the ``repro.obs.profile`` model-zoo
+    sweep (per-executable-signature flops / hbm_bytes /
+    collective_bytes from the *compiled* HLO — zero wall-clock noise)
+    and gates each metric at ``--cost-tol`` relative drift.  Skipped
+    with a note when the baseline was recorded under a different jax
+    version (XLA optimizes differently across releases) or carries no
+    profile rows.
 
 Failures are error-severity findings (``diag-perf-regression`` /
-``diag-quality-regression`` from the `repro.analysis` catalog); exit
+``diag-quality-regression`` / ``obs-cost-drift`` from the
+`repro.analysis` catalog); exit
 status is nonzero iff any — the CI contract.  Baseline rows the current
 run didn't measure (and vice versa) are listed in the report meta, never
 silently dropped.  A schema-1 baseline (pre-quality) skips the quality
@@ -62,6 +70,7 @@ DEFAULT_PERF_SLACK_US = 500.0
 DEFAULT_RHAT_TOL = 0.05
 DEFAULT_TV_TOL = 0.01
 DEFAULT_ESS_FRAC = 0.3
+DEFAULT_COST_TOL = 0.10
 
 
 def check_perf(baseline: dict, report: Report, *, suites=PERF_SUITES,
@@ -184,6 +193,77 @@ def check_quality(baseline: dict, report: Report, *, quick=False,
     report.meta["quality_compared"] = compared
 
 
+def check_static_cost(baseline: dict, report: Report, *,
+                      tol=DEFAULT_COST_TOL, sweep_rows=None) -> None:
+    """Gate the *static* HLO costs of the profile model-zoo sweep.
+
+    Unlike the perf gate these numbers carry zero wall-clock noise: the
+    sweep lowers the same programs at the same fixed budget and reads
+    flops / hbm_bytes / collective_bytes off the optimized HLO, so on
+    the same jax version a clean rerun reproduces the baseline exactly
+    and any drift beyond ``tol`` is a real compiler-visible change (a
+    silent recompute, a lost fusion, a new collective).  Baselines
+    recorded under a *different* jax version are skipped with a note —
+    XLA is free to optimize differently across releases.  ``sweep_rows``
+    lets tests inject rows without paying for compiles."""
+    base_rows = {r["sig"]: r for r in baseline.get("profile", [])}
+    if not base_rows:
+        report.meta["cost_note"] = (
+            "baseline has no profile rows (pre-profile schema or "
+            "--skip-profile); regenerate it with a full benchmarks/run.py "
+            "pass"
+        )
+        return
+    import jax
+    if baseline.get("jax") != jax.__version__:
+        report.meta["cost_note"] = (
+            f"baseline jax {baseline.get('jax')} != current "
+            f"{jax.__version__}: static HLO costs are not comparable "
+            "across jax releases; regenerate the baseline"
+        )
+        return
+    if sweep_rows is None:
+        from repro.obs import profile as profile_mod
+
+        sweep_rows = profile_mod.static_profile_sweep(
+            quick=bool(baseline.get("quick"))
+        )
+    cur_rows = {r["sig"]: r for r in sweep_rows}
+    compared = 0
+    for sig, cur in cur_rows.items():
+        base = base_rows.get(sig)
+        if base is None:
+            continue
+        compared += 1
+        checks = []
+        for metric in ("flops", "hbm_bytes", "collective_bytes"):
+            b = float(base.get(metric) or 0.0)
+            c = float(cur.get(metric) or 0.0)
+            drift = abs(c - b) / max(abs(b), 1.0)
+            checks.append((metric, b, c, drift, drift <= tol))
+        report.meta["cost_rows"].append({
+            "sig": sig,
+            "checks": [
+                {"metric": m, "baseline": b, "current": c,
+                 "drift": round(d, 4), "ok": ok}
+                for m, b, c, d, ok in checks
+            ],
+        })
+        for metric, b, c, drift, ok in checks:
+            if not ok:
+                report.extend([Finding(
+                    "obs-cost-drift", f"profile:{sig}",
+                    f"{metric} {c:.4g} vs baseline {b:.4g} "
+                    f"(drift {drift:.1%} > {tol:.0%} tolerance)",
+                    fixit="inspect the lowered HLO (repro.obs.profile) to "
+                          "find the recompute/fusion change; if intended, "
+                          "regenerate the baseline with benchmarks/run.py",
+                )])
+    report.meta["cost_missing"] = sorted(set(base_rows) - set(cur_rows))
+    report.meta["cost_new"] = sorted(set(cur_rows) - set(base_rows))
+    report.meta["cost_compared"] = compared
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python benchmarks/check_regression.py",
@@ -197,12 +277,16 @@ def main(argv=None) -> int:
                     help="CI budget: first baseline quality model only")
     ap.add_argument("--skip-perf", action="store_true")
     ap.add_argument("--skip-quality", action="store_true")
+    ap.add_argument("--skip-cost", action="store_true",
+                    help="skip the static-HLO-cost drift gate")
     ap.add_argument("--perf-tol", type=float, default=DEFAULT_PERF_TOL)
     ap.add_argument("--perf-slack-us", type=float,
                     default=DEFAULT_PERF_SLACK_US)
     ap.add_argument("--rhat-tol", type=float, default=DEFAULT_RHAT_TOL)
     ap.add_argument("--tv-tol", type=float, default=DEFAULT_TV_TOL)
     ap.add_argument("--ess-frac", type=float, default=DEFAULT_ESS_FRAC)
+    ap.add_argument("--cost-tol", type=float, default=DEFAULT_COST_TOL,
+                    help="relative drift tolerance for static HLO costs")
     args = ap.parse_args(argv)
 
     if not os.path.exists(args.baseline):
@@ -218,6 +302,7 @@ def main(argv=None) -> int:
         "baseline_created": baseline.get("created_utc"),
         "perf_rows": [],
         "quality_rows": [],
+        "cost_rows": [],
     })
     if not args.skip_perf:
         check_perf(baseline, report, tol=args.perf_tol,
@@ -226,6 +311,8 @@ def main(argv=None) -> int:
         check_quality(baseline, report, quick=args.quick,
                       rhat_tol=args.rhat_tol, tv_tol=args.tv_tol,
                       ess_frac=args.ess_frac)
+    if not args.skip_cost:
+        check_static_cost(baseline, report, tol=args.cost_tol)
 
     if args.out:
         pathlib.Path(args.out).write_text(report.to_json())
@@ -245,6 +332,15 @@ def main(argv=None) -> int:
                       f"(limit {c['limit']:.4f})")
         if report.meta.get("quality_note"):
             print(f"note: {report.meta['quality_note']}")
+        for r in report.meta["cost_rows"]:
+            for c in r["checks"]:
+                mark = "ok" if c["ok"] else "FAIL"
+                print(f"cost  {mark:4} {r['sig']} "
+                      f"{c['metric']}: {c['current']:.4g} "
+                      f"(baseline {c['baseline']:.4g}, "
+                      f"drift {c['drift']:.1%})")
+        if report.meta.get("cost_note"):
+            print(f"note: {report.meta['cost_note']}")
         print(report.render_text())
     return report.exit_code
 

@@ -100,6 +100,18 @@ def quality_rows(quick: bool) -> list[dict]:
     return report.meta["rows"]
 
 
+def profile_rows(quick: bool) -> list[dict]:
+    """The static-cost side of the baseline: `repro.obs.profile`'s fixed
+    model-zoo sweep — per-executable-signature flops / hbm_bytes /
+    collective_bytes + roofline bottleneck, derived from the compiled
+    artifacts at a tiny fixed budget.  Pure compile-time data (no wall
+    clock), so the drift gate can re-derive and diff it bit-for-bit on
+    the same jax version."""
+    from repro.obs import profile as profile_mod
+
+    return profile_mod.static_profile_sweep(quick=quick)
+
+
 def parse_row(row: str) -> dict:
     """One ``name,us_per_call,derived`` CSV row -> a JSON-friendly record
     (``derived`` stays a raw string: its key=value grammar is per-suite)."""
@@ -142,13 +154,18 @@ def write_baseline(suite_rows: dict, args) -> None:
         "quality": (
             [] if args.skip_quality else quality_rows(bool(args.quick))
         ),
+        "profile": (
+            [] if getattr(args, "skip_profile", False)
+            else profile_rows(bool(args.quick))
+        ),
     }
     os.makedirs(os.path.dirname(path), exist_ok=True)
     with open(path, "w") as f:
         json.dump(record, f, indent=1)
     print(f"# wrote {os.path.relpath(path)} "
           f"({sum(len(v) for v in record['suites'].values())} rows, "
-          f"{len(record['quality'])} quality rows)")
+          f"{len(record['quality'])} quality rows, "
+          f"{len(record['profile'])} profile rows)")
     # every baseline write also appends to the trajectory history: the
     # baseline file is a snapshot (each PR overwrites it), the trajectory
     # is the record of how the numbers moved PR over PR
@@ -204,6 +221,13 @@ def main() -> None:
                     help="runtime suite: also write a traced bursty-pass "
                          "snapshot (Perfetto JSON + .jsonl + .attrib.json) "
                          "alongside the baseline")
+    ap.add_argument("--profile-out", default=None, metavar="PATH",
+                    help="runtime suite (with --trace-out): also write the "
+                         "compiled-artifact profile of the snapshot pass "
+                         "(profile.json + .series.jsonl)")
+    ap.add_argument("--skip-profile", action="store_true",
+                    help="omit the static-cost profile sweep from the "
+                         "baseline snapshot")
     args = ap.parse_args()
     if args.smoke:
         args.quick = True
@@ -223,6 +247,8 @@ def main() -> None:
             kwargs["fused"] = True
         if args.trace_out and name == "runtime":
             kwargs["trace_out"] = args.trace_out
+            if args.profile_out:
+                kwargs["profile_out"] = args.profile_out
         suite_rows[name] = fn(**kwargs) or []
         print(f"# {name} took {time.time()-t0:.1f}s", flush=True)
     if set(suite_rows) == set(SUITES):

@@ -143,6 +143,19 @@ RULES: dict[str, tuple[str, str]] = {
         "a benchmark's sampling-quality metric (R-hat / TV / ESS) "
         "regressed beyond tolerance against BENCH_BASELINE.json",
     ),
+    # -- observability (repro.obs profiler + trace integrity) ---------------
+    "obs-trace-dropped": (
+        "warning",
+        "the tracer ring buffer overflowed during the run (dropped events "
+        "silently skew attribution/profile coverage; re-run with "
+        "obs.enable(capacity=...) raised)",
+    ),
+    "obs-cost-drift": (
+        "error",
+        "a bucket executable's static HLO cost (flops / hbm_bytes / "
+        "collective_bytes) drifted beyond tolerance against the baseline "
+        "profile rows — a silent recompute or fusion regression",
+    ),
     # -- repo-convention AST lint (analysis/source_lint.py) -----------------
     "compat-import": (
         "error",

@@ -51,6 +51,7 @@ from repro.core import distributed as dist_mod
 from repro.core import mrf as mrf_mod
 from repro.core.graphs import DiscreteBayesNet, GridMRF
 from repro.core.mapping import MeshPlacement
+from repro.obs import profile as profile_mod
 from repro.obs import tracer
 
 
@@ -317,6 +318,13 @@ class CompiledProgram:
                     fused=fused, diag_total=diag_total,
                 )
             elif backend == "schedule":
+                if (profile_mod.enabled() and carry_state is None
+                        and not diagnostics):
+                    profile_mod.capture_program(
+                        self, n_chains=n_chains, n_iters=n_iters,
+                        burn_in=burn_in, thin=thin, sampler=sampler,
+                        fused=fused,
+                    )
                 out = backend_mod.run_bn_schedule(
                     self.schedule_executable(), key, n_chains=n_chains,
                     n_iters=n_iters, burn_in=burn_in, sampler=sampler,
@@ -376,6 +384,12 @@ class CompiledProgram:
                 self.mrf, self.ir.evidence
             )
         if backend == "schedule":
+            if (profile_mod.enabled() and carry_state is None
+                    and not diagnostics and pin_mask is None):
+                profile_mod.capture_program(
+                    self, n_chains=n_chains, n_iters=n_iters,
+                    sampler=sampler, fused=fused,
+                )
             out = backend_mod.run_mrf_schedule(
                 self.schedule_executable(), evidence, key, n_chains=n_chains,
                 n_iters=n_iters, sampler=sampler, fused=fused,

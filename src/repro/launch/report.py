@@ -138,10 +138,11 @@ def runtime_table(recs: list[dict]) -> str:
     rows = [
         "| trace | backend | models | queries | mean batch | batched qps | "
         "serial qps | speedup | hit rate | evict | recompiles | sim p95 | "
-        "rhat max | ess min |",
-        "|---|---|---|---|---|---|---|---|---|---|---|---|---|---|",
+        "sim p99 | rhat max | ess min | dropped |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|",
     ]
     for r in sorted(recs, key=lambda r: (r["trace"], r["backend"])):
+        p99 = r.get("sim_latency_p99_ms")
         rows.append(
             f"| {r['trace']} | {r['backend']} | {r['n_models']} "
             f"| {r['n_queries']} | {r['mean_batch']:.2f} "
@@ -149,8 +150,10 @@ def runtime_table(recs: list[dict]) -> str:
             f"| {r['speedup']:.2f}x | {r['cache_hit_rate']:.3f} "
             f"| {r['cache_evictions']} | {r['recompiles']} "
             f"| {r['sim_latency_p95_ms']:.2f}ms "
+            f"| {'n/a' if p99 is None else f'{p99:.2f}ms'} "
             f"| {_fmt_q(r.get('rhat_max'), '.3f')} "
-            f"| {_fmt_q(r.get('ess_min'), '.0f')} |"
+            f"| {_fmt_q(r.get('ess_min'), '.0f')} "
+            f"| {_fmt_q(r.get('trace_dropped'), 'd')} |"
         )
     g = next((r for r in recs if "workers_speedup" in r), None)
     if g:
@@ -253,6 +256,52 @@ def attribution_table(rows: list[dict]) -> str:
             f"| {r['comm_cycles']} | {r['share']:.1%} "
             f"| {r['n_dispatches']} | {ms(r, 'pred_s')} | {ms(r, 'meas_s')} "
             f"| {err(r)} |"
+        )
+    return "\n".join(out)
+
+
+def profile_table(rows: list[dict], comm: list[dict] | None = None) -> str:
+    """Compiled-artifact roofline view (`repro.obs.profile`): one row per
+    bucket-executable signature with its static HLO costs (trip-count-aware
+    flops / HBM bytes / collective bytes), the roofline bottleneck, the
+    roofline lower bound, and the measured dispatch mean with
+    achieved-vs-peak — followed by per-comm-mechanism rows.  Rendered by
+    the runtime CLI's `--profile-out` path and
+    `python -m repro.obs --profile`."""
+
+    def num(x):
+        return "0" if not x else f"{x:.3g}"
+
+    out = [
+        "| model | kind | sampler | fused | pad | iters x chains | disp | "
+        "flops | hbm B | coll B | bottleneck | roofline | meas mean | "
+        "peak frac |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        m = r.get("meta", {})
+        meas = r.get("measured_mean_s")
+        frac = r.get("peak_frac")
+        out.append(
+            f"| {m.get('model', '—')} | {m.get('kind', '—')} "
+            f"| {m.get('sampler', '—')} | {int(bool(m.get('fused')))} "
+            f"| {m.get('n_padded', '—')} "
+            f"| {m.get('n_iters', '—')}x{m.get('n_chains', '—')} "
+            f"| {r.get('n_dispatches', 0)} "
+            f"| {num(r['flops'])} | {num(r['hbm_bytes'])} "
+            f"| {num(r['collective_bytes'])} | {r['bottleneck']} "
+            f"| {_fmt_s(r['roofline_s'])} "
+            f"| {_fmt_s(meas) if meas is not None else 'n/a'} "
+            f"| {_fmt_q(frac, '.2%')} |"
+        )
+    for c in comm or []:
+        bw = c.get("achieved_bw")
+        out.append(
+            f"| comm | {c['mechanism']} | {c['hlo_op']} | — | — | — "
+            f"| {c['n_dispatches']} | — | — | {num(c['total_bytes'])} "
+            f"| collective | — "
+            f"| {_fmt_s(c['measured_total_s'])} "
+            f"| {'n/a' if bw is None else f'{bw / 1e9:.3g}GB/s'} |"
         )
     return "\n".join(out)
 

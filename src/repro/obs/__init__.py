@@ -25,9 +25,22 @@ every instrumented path; enable with `REPRO_TRACE=1` or:
 `python -m repro.runtime --trace-out trace.json` wires all of that into
 the serving CLI; `python -m repro.obs trace.jsonl` re-checks a saved log's
 attribution coverage (the CI step).
+
+Two sibling layers build on the trace:
+
+  * `obs.profile` — compiled-artifact roofline profiler: static
+    flops/bytes/collective costs per bucket executable (cached by
+    signature, joined against measured dispatch spans); enable with
+    `REPRO_PROFILE=1` / `profile.enable()`, or `--profile-out` on the
+    runtime CLI.  `python -m repro.obs --profile profile.json`
+    re-validates a saved artifact.
+  * `obs.timeseries` — deterministic sim-clock metrics series
+    (counters/gauges/histograms) always recorded by the engine into
+    `metrics.series`; `--profile-out x.json` also writes
+    `x.series.jsonl`, byte-identical across same-seed runs.
 """
 
-from repro.obs import attrib, export, tracer
+from repro.obs import attrib, export, profile, timeseries, tracer
 from repro.obs.tracer import (
     DEFAULT_CAPACITY,
     Event,
@@ -45,6 +58,8 @@ from repro.obs.tracer import (
 __all__ = [
     "attrib",
     "export",
+    "profile",
+    "timeseries",
     "tracer",
     "DEFAULT_CAPACITY",
     "Event",

@@ -1,13 +1,18 @@
-"""Attribution checker CLI: validate a saved trace's cost attribution.
+"""Attribution/profile checker CLI: validate saved obs artifacts.
 
-    python -m repro.obs trace.jsonl          # recompute from the event log
-    python -m repro.obs trace.attrib.json    # validate a saved attribution
+    python -m repro.obs trace.jsonl            # recompute from the event log
+    python -m repro.obs trace.attrib.json      # validate a saved attribution
+    python -m repro.obs --profile profile.json # validate a saved profile
 
 Parses the artifact, renders the predicted-vs-measured attribution table
-(`launch/report.py`), and exits non-zero when the attribution has *gaps* —
-dispatched rounds no `round_cost` event covers — or no dispatches at all.
-CI runs this against the bursty-smoke trace artifact so a silent
-attribution hole fails the build instead of shipping.
+(or the roofline profile table) from `launch/report.py`, and exits
+non-zero when the artifact has holes: attribution *gaps* (dispatched
+rounds no `round_cost` event covers), no dispatches at all, or — in
+`--profile` mode — unattributed dispatches, empty captures, or invalid
+roofline rows.  A saved attribution that recorded tracer ring-buffer
+drops prints an `obs-trace-dropped` warning (coverage is suspect but not
+necessarily broken).  CI runs this against the bursty-smoke artifacts so
+a silent hole fails the build instead of shipping.
 """
 
 from __future__ import annotations
@@ -16,8 +21,10 @@ import argparse
 import json
 import sys
 
-from repro.launch.report import attribution_table
+from repro.analysis import Finding
+from repro.launch.report import attribution_table, profile_table
 from repro.obs import attrib, export
+from repro.obs import profile as profile_mod
 
 
 def check_rows(rows: list[dict], gaps: list[dict]) -> int:
@@ -39,17 +46,48 @@ def check_rows(rows: list[dict], gaps: list[dict]) -> int:
     return 0
 
 
+def check_profile(rec: dict, path: str) -> int:
+    problems = profile_mod.validate_profile(rec)
+    joined = rec.get("joined", {})
+    rows = joined.get("rows", [])
+    if rows or joined.get("comm"):
+        print(profile_table(rows, joined.get("comm", [])))
+    print(f"\n[obs] {len(rec.get('buckets', []))} captured executables, "
+          f"{joined.get('n_dispatches', 0)} dispatches "
+          f"({joined.get('n_sharded_skipped', 0)} sharded), "
+          f"{len(joined.get('unattributed', []))} unattributed")
+    for p in problems:
+        print(f"[obs] ERROR: {p}")
+    return 2 if problems else 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="repro.obs")
-    ap.add_argument("path", help="trace .jsonl event log or .attrib.json")
+    ap.add_argument("path", help="trace .jsonl event log, .attrib.json, or "
+                                 "(with --profile) profile.json")
+    ap.add_argument("--profile", action="store_true",
+                    help="validate a saved obs.profile artifact instead of "
+                         "an attribution")
     args = ap.parse_args(argv)
+    if args.profile:
+        with open(args.path) as f:
+            return check_profile(json.load(f), args.path)
     if args.path.endswith(".jsonl"):
         events = export.load_jsonl(args.path)
         rows, gaps = attrib.attribution(events)
+        dropped = 0
     else:
         with open(args.path) as f:
             rec = json.load(f)
         rows, gaps = rec.get("rows", []), rec.get("gaps", [])
+        dropped = rec.get("dropped", 0)
+    if dropped:
+        print("[obs] " + Finding(
+            "obs-trace-dropped", f"trace:{args.path}",
+            f"{dropped} events were dropped by the tracer ring buffer; "
+            "attribution coverage may be incomplete",
+            fixit="re-record with obs.enable(capacity=...) raised",
+        ).render())
     return check_rows(rows, gaps)
 
 

@@ -17,9 +17,10 @@ import json
 import os
 
 from repro import obs
-from repro.launch.report import attribution_table
+from repro.launch.report import attribution_table, profile_table
 from repro.obs import attrib as attrib_mod
 from repro.obs import export as export_mod
+from repro.obs import profile as profile_mod
 from repro.runtime.admission import AdmissionConfig
 from repro.runtime.engine import Engine, EngineConfig
 from repro.runtime.trace import TRACES
@@ -72,10 +73,20 @@ def main(argv=None) -> int:
                          "(.jsonl), and the predicted-vs-measured "
                          "attribution (.attrib.json); prints the "
                          "attribution table and fails on coverage gaps")
+    ap.add_argument("--profile-out", default=None, metavar="PATH",
+                    help="capture each bucket executable's static HLO "
+                         "costs + roofline bottleneck at first jit, join "
+                         "them against measured dispatch spans, and write "
+                         "profile.json to PATH plus the deterministic "
+                         "metrics time-series (.series.jsonl); prints the "
+                         "profile table and fails on unattributed "
+                         "dispatches")
     args = ap.parse_args(argv)
 
-    if args.trace_out:
+    if args.trace_out or args.profile_out:
         obs.enable()
+    if args.profile_out:
+        profile_mod.enable()
 
     models, queries = TRACES[args.trace](
         args.queries, quick=args.quick, seed=args.seed
@@ -113,13 +124,15 @@ def main(argv=None) -> int:
     s = engine.metrics.summary()
 
     gaps = []
-    if args.trace_out:
+    unattributed = []
+    if args.trace_out or args.profile_out:
         tr = obs.get()
         events = list(tr.events)
+        dicts = export_mod.events_as_dicts(events)
+    if args.trace_out:
         base = os.path.splitext(args.trace_out)[0]
         export_mod.write_perfetto(args.trace_out, events)
         export_mod.write_jsonl(base + ".jsonl", events)
-        dicts = export_mod.events_as_dicts(events)
         rows, gaps = attrib_mod.attribution(dicts)
         with open(base + ".attrib.json", "w") as f:
             json.dump({
@@ -129,6 +142,22 @@ def main(argv=None) -> int:
         print(f"[runtime] trace: {args.trace_out} ({len(events)} events, "
               f"{tr.dropped} dropped) + {base}.jsonl + {base}.attrib.json")
         print(attribution_table(rows))
+    if args.profile_out:
+        pbase = os.path.splitext(args.profile_out)[0]
+        rec = profile_mod.write_profile(
+            args.profile_out, profile_mod.get(), dicts
+        )
+        engine.metrics.series.write_jsonl(pbase + ".series.jsonl")
+        joined = rec["joined"]
+        unattributed = joined["unattributed"]
+        print(f"[runtime] profile: {args.profile_out} "
+              f"({len(rec['buckets'])} executables, "
+              f"{joined['n_dispatches']} dispatches, "
+              f"{joined['n_sharded_skipped']} sharded) "
+              f"+ {pbase}.series.jsonl")
+        print(profile_table(joined["rows"], joined["comm"]))
+        profile_mod.disable()
+    if args.trace_out or args.profile_out:
         obs.disable()
     print(f"[runtime] trace={args.trace} backend={args.backend} "
           f"fused={args.fused} workers={args.workers} models={len(models)} "
@@ -149,11 +178,25 @@ def main(argv=None) -> int:
         print(f"[runtime] ERROR: max queue depth {s['max_queue_depth']} "
               f"exceeds the configured limit")
         return 1
+    if s["trace_dropped"]:
+        from repro.analysis import Finding
+        print("[runtime] " + Finding(
+            "obs-trace-dropped", f"trace:{args.trace}",
+            f"{s['trace_dropped']} events dropped by the tracer ring "
+            "buffer during this run",
+            fixit="re-run with obs.enable(capacity=...) raised",
+        ).render())
     if gaps:
         for g in gaps:
             print(f"[runtime] ERROR: attribution gap — program "
                   f"{g['program'][:16]} dispatched {g['n_dispatches']}x "
                   "with no recorded round costs")
+        return 1
+    if unattributed:
+        for u in unattributed:
+            print(f"[runtime] ERROR: unattributed dispatches — "
+                  f"sig={str(u['sig'])[:48]!r} x{u['n_dispatches']} "
+                  "never captured by the profiler")
         return 1
     return 0
 

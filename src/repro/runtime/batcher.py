@@ -29,6 +29,7 @@ import numpy as np
 from repro.analysis import kernel_lint
 from repro.compile import backend as backend_mod
 from repro.core import mrf as mrf_mod
+from repro.obs import profile as profile_mod
 from repro.obs import tracer
 from repro.kernels.bn_gibbs import FUSED_BN_SAMPLERS
 
@@ -414,13 +415,21 @@ def _execute_bucket(
         if key.fused:
             # same first-use guarantee the single-program path gets
             program.ensure_fused_cross_check(key.sampler)
-        out = _bn_bucket(
+        a = (
             program.cbn, groups, jnp.asarray(ev_vals, jnp.int32),
             jnp.asarray(ev_mask), seeds_q, carry_q, totals_q,
+        )
+        kw = dict(
             n_chains=key.n_chains, n_iters=key.n_iters, burn_in=key.burn_in,
             thin=key.thin, sampler=key.sampler, return_state=run_state,
             fused=key.fused, interpret=jax.default_backend() != "tpu",
         )
+        if profile_mod.enabled():
+            profile_mod.capture_bucket(
+                program, key, n_pad, _bn_bucket, a, kw,
+                model=queries[0].model,
+            )
+        out = _bn_bucket(*a, **kw)
         marg, vals = out[0], out[1]
         states = out[2] if run_state else None
         marg, vals = np.asarray(marg), np.asarray(vals)
@@ -454,12 +463,17 @@ def _execute_bucket(
         parities, eager = ex.parities, False
     else:
         parities, eager = (0, 1), True
-    out = _mrf_bucket(
-        mrf, parities, imgs, seeds_q, pmask_q, pvals_q, carry_q, totals_q,
+    a = (mrf, parities, imgs, seeds_q, pmask_q, pvals_q, carry_q, totals_q)
+    kw = dict(
         n_chains=key.n_chains, n_iters=key.n_iters, sampler=key.sampler,
         fused=key.fused, interpret=jax.default_backend() != "tpu",
         eager=eager, return_state=run_state,
     )
+    if profile_mod.enabled():
+        profile_mod.capture_bucket(
+            program, key, n_pad, _mrf_bucket, a, kw, model=queries[0].model,
+        )
+    out = _mrf_bucket(*a, **kw)
     labels, states = (out if run_state else (out, None))
     labels = np.asarray(labels)
 

@@ -41,7 +41,7 @@ import time
 from repro.compile import compile_graph, set_cache_capacity
 from repro.compile import ir as ir_mod
 from repro.core.graphs import DiscreteBayesNet, GridMRF
-from repro.obs import tracer
+from repro.obs import timeseries, tracer
 from repro.runtime import batcher as batcher_mod
 from repro.runtime.admission import (
     DEFER,
@@ -262,6 +262,10 @@ class Engine:
             cfg.pad_sizes,
         )
         admission = AdmissionController(cfg.admission)
+        series = self.metrics.series
+        # delta-base for this run's ring-buffer overflow (tracer is
+        # process-global; the count must describe this trace only)
+        dropped0 = tracer.get().dropped if tracer.enabled() else 0
         tracer.instant(
             "run_start", cat="runtime", sim_t=0.0,
             n_workers=cfg.n_workers, backend=cfg.backend, fused=cfg.fused,
@@ -336,11 +340,10 @@ class Engine:
                 programs[key] = self._program(q.model)
                 bucket.append(q)
                 admission.note_depth(len(bucket))
+            depth = sum(len(b) for b in pending.values())
+            series.gauge("queue_depth").sample(clock, depth)
             if tracer.enabled():
-                tracer.counter(
-                    "queue_depth",
-                    sum(len(b) for b in pending.values()), sim_t=clock,
-                )
+                tracer.counter("queue_depth", depth, sim_t=clock)
                 if admission.config.rate_qps is not None:
                     tracer.counter(
                         "tokens", round(admission.tokens, 6), sim_t=clock
@@ -408,6 +411,17 @@ class Engine:
                 programs[key], key, qs, clock, return_state=return_state
             )
             self.metrics.record_batch(rec)
+            series.histogram(
+                "pad_efficiency", boundaries=timeseries.PAD_EFF_BOUNDARIES,
+            ).observe(rec.start_s, rec.n_real / max(rec.n_padded, 1))
+            series.histogram("bucket_service_s").observe(
+                rec.start_s, rec.service_s
+            )
+            # cumulative flush-window stall across the pool, sampled per
+            # dispatch: the window/ladder autotuner's minimization target
+            series.gauge("worker_stall_s").sample(
+                rec.finish_s, round(sum(executor.pool.stall_s), 9)
+            )
             done = []
             for q, r in zip(qs, batch):
                 left = q.n_iters - key.n_iters
@@ -426,6 +440,9 @@ class Engine:
                     r.carry = None  # slices are internal; results are final
                     results[r.qid] = r
                     done.append(r)
+                    series.histogram("query_latency_s").observe(
+                        rec.finish_s, r.latency_s
+                    )
                     if r.quality is not None and tracer.enabled():
                         # convergence lands on the timeline next to the
                         # dispatch lanes that produced it
@@ -447,6 +464,8 @@ class Engine:
         self.metrics.shed_queue = admission.shed_queue
         self.metrics.defers = admission.defers
         self.metrics.max_queue_depth = admission.max_queue_depth
+        if tracer.enabled():
+            self.metrics.trace_dropped = tracer.get().dropped - dropped0
         self.shed_qids = list(admission.shed_qids)
         self.metrics.wall_s = (  # lint: allow[wallclock-in-sim]
             time.perf_counter() - wall0

@@ -38,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import compat
+from repro.obs import profile as profile_mod
 from repro.obs import tracer
 from repro.runtime import batcher as batcher_mod
 from repro.runtime import calibrate as calibrate_mod
@@ -310,6 +311,9 @@ class Executor:
             n_iters=key.n_iters, n_chains=key.n_chains,
             resumed=key.resumed, program=program.program_key,
             service_s=service_s, service_src=service_src,
+            # joins the span against obs.profile's cached static costs;
+            # pure string math, stamped whether or not profiling is on
+            profile_sig=profile_mod.bucket_signature(key, n_padded),
         )
         tracer.sim_span(
             "dispatch", start, finish, cat="runtime",

@@ -13,6 +13,24 @@ describes one trace.
 
 Percentiles are honest about tiny samples: p50/p95 of 0 or 1 observations
 is reported as None (rendered "n/a"), never a fabricated number.
+
+Key reference (summary dict; all sim-clock unless noted):
+
+  =================  ======================================================
+  latency_p50/p95_s  exact percentiles over per-query latencies
+                     (``percentile()`` — None below 2 samples)
+  latency_p99_s      *histogram-derived*: upper bucket bound from the
+                     ``query_latency_s`` series (conservative; None below
+                     2 observations, same refusal as ``percentile()``)
+  trace_dropped      ring-buffer overflow count for this run when tracing
+                     was on (0 = full attribution coverage; nonzero emits
+                     an ``obs-trace-dropped`` warning finding)
+  calib_median_err   advisory, wall-derived — excluded from determinism
+                     comparisons along with wall_s
+  series             ``obs.timeseries.SeriesRegistry`` — queue_depth /
+                     pad_efficiency / worker_stall_s / bucket_service_s /
+                     query_latency_s sampled on the sim clock
+  =================  ======================================================
 """
 
 from __future__ import annotations
@@ -22,6 +40,7 @@ import dataclasses
 import numpy as np
 
 from repro.compile import cache_stats
+from repro.obs import timeseries
 
 
 @dataclasses.dataclass
@@ -74,6 +93,10 @@ class RuntimeMetrics:
         self.shed_queue = 0
         self.defers = 0
         self.max_queue_depth = 0
+        # sim-clock time series (always on; pure python, deterministic)
+        self.series = timeseries.SeriesRegistry()
+        # tracer ring-buffer overflow during this run (0 when tracing off)
+        self.trace_dropped = 0
 
     def record_batch(self, rec: BatchRecord) -> None:
         self.batch_records.append(rec)
@@ -150,6 +173,11 @@ class RuntimeMetrics:
             # at the edge (the old *_ms keys were converted twice)
             "latency_p50_s": p50,
             "latency_p95_s": p95,
+            # histogram-derived (bucket upper bound): conservative, and
+            # like percentile() it refuses below 2 observations
+            "latency_p99_s": (
+                self.series.histogram("query_latency_s").quantile(99)
+            ),
             "latency_mean_s": float(np.mean(lat)) if n else None,
             "sim_elapsed_s": finish,
             "throughput_qps": n / finish if finish else 0.0,
@@ -180,6 +208,7 @@ class RuntimeMetrics:
             "quality_queries": len(qual),
             "rhat_max": float(max(rhats)) if rhats else None,
             "ess_min": float(min(esses)) if esses else None,
+            "trace_dropped": self.trace_dropped,
             "wall_s": self.wall_s,
         }
 
@@ -194,22 +223,25 @@ class RuntimeMetrics:
         rhat = "n/a" if s["rhat_max"] is None else f"{s['rhat_max']:.3f}"
         ess = "n/a" if s["ess_min"] is None else f"{s['ess_min']:.0f}"
         rows = [
-            "| queries | batches | mean batch | pad eff | p50 | p95 | "
+            "| queries | batches | mean batch | pad eff | p50 | p95 | p99 | "
             "sim qps | workers (util) | stall | shed | defer | maxq | "
-            "hit rate | evict | recompiles | rhat max | ess min | wall |",
+            "hit rate | evict | recompiles | rhat max | ess min | dropped | "
+            "wall |",
             "|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|"
-            "---|---|---|",
+            "---|---|---|---|---|",
             (
                 f"| {s['n_queries']} | {s['n_batches']} "
                 f"| {mean_batch} | {s['pad_efficiency']:.2f} "
                 f"| {fmt_ms(s['latency_p50_s'])} "
                 f"| {fmt_ms(s['latency_p95_s'])} "
+                f"| {fmt_ms(s['latency_p99_s'])} "
                 f"| {s['throughput_qps']:.1f} "
                 f"| {s['n_workers']} ({util}) | {stall} "
                 f"| {s['sheds']} | {s['defers']} | {s['max_queue_depth']} "
                 f"| {s['cache_hit_rate']:.3f} "
                 f"| {s['cache_evictions']} | {s['recompiles']} "
                 f"| {rhat} | {ess} "
+                f"| {s['trace_dropped']} "
                 f"| {s['wall_s']:.2f}s |"
             ),
         ]

@@ -93,3 +93,79 @@ def test_hlo_cost_known_programs():
     )
     assert res.returncode == 0, res.stderr[-3000:]
     assert "HLO_COST_OK" in res.stdout
+
+
+_COMPILED_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    from repro.compile import backend as backend_mod
+    from repro.compile.program import compile_graph
+    from repro.core import compat
+    from repro.core.distributed import run_program_sharded
+    from repro.core.graphs import GridMRF, bn_repository_replica
+    from repro.launch import hlo_cost
+
+    # compiled fused BN color-round program: the Pallas round kernel
+    # (interpret mode off-TPU) must surface nonzero static cost off the
+    # *optimized* HLO, and the walker must scale it with the sweep count
+    prog = compile_graph(bn_repository_replica("survey"))
+    ex = prog.schedule_executable()
+
+    def lower_bn(n_iters):
+        return backend_mod._run_bn_rounds.lower(
+            ex.cbn, ex.round_groups, jax.random.key(0), None, None, None,
+            n_chains=8, n_iters=n_iters, burn_in=8, sampler="lut_ky",
+            thin=1, return_state=False, fused=True, interpret=True,
+        )
+
+    lo = hlo_cost.analyze(lower_bn(16).compile().as_text())
+    hi = hlo_cost.analyze(lower_bn(32).compile().as_text())
+    assert lo.hbm_bytes > 0, lo
+    assert lo.flops > 0, lo  # fused kernels lower real dot ops
+    # trip-count awareness: doubling n_iters must roughly double the
+    # sweep-proportional flops (band absorbs the shared burn-in loop)
+    ratio = hi.flops / lo.flops
+    assert 1.5 <= ratio <= 2.6, (lo.flops, hi.flops, ratio)
+    # single-host bucket entry: no collectives in the lowered module
+    assert lo.collective_bytes == 0, lo.collective_by_op
+
+    # ppermute-sharded MRF schedule program: the checkerboard halo
+    # exchange must show up as collective-permute bytes
+    mprog = compile_graph(GridMRF(8, 8, 3, theta=1.1, h=1.8, name="grid8"))
+    mprog.schedule_executable()  # first-lowering cross-check runs concrete
+    mesh = compat.make_mesh((4, 2), ("model", "data"))
+
+    def sharded(ev, key):
+        return run_program_sharded(
+            mprog, key, mesh, n_chains=8, n_iters=4,
+            evidence=ev, backend="schedule",
+        )
+
+    comp = jax.jit(sharded).lower(
+        jnp.zeros((8, 8), jnp.int32), jax.random.key(0)).compile()
+    cs = hlo_cost.analyze(comp.as_text())
+    assert cs.collective_by_op.get("collective-permute", 0) > 0, \\
+        cs.collective_by_op
+    assert cs.collective_bytes > 0, cs
+    print("HLO_COST_COMPILED_OK")
+    """
+)
+
+
+@pytest.mark.slow
+def test_hlo_cost_compiled_programs():
+    """Static costs of real compiled artifacts: fused BN color rounds
+    carry nonzero trip-scaled cost, and the ppermute-sharded schedule
+    lowers to nonzero collective-permute bytes (the signal obs.profile's
+    comm rows and the static-cost drift gate are built on)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run(
+        [sys.executable, "-c", _COMPILED_SCRIPT], env=env,
+        capture_output=True, text=True, timeout=600,
+    )
+    assert res.returncode == 0, res.stderr[-3000:]
+    assert "HLO_COST_COMPILED_OK" in res.stdout
