@@ -81,6 +81,28 @@ def _time_run(prog, backend: str, *, n_chains: int, n_iters: int,
     return (time.perf_counter() - t0) / n_iters
 
 
+def _time_run_sharded(prog, mesh, *, n_chains: int, n_iters: int,
+                      fused: bool):
+    """Steady-state seconds per sweep for the shard_map route (warmup pays
+    the compile plus, for fused, the one-time sharded cross-check)."""
+    key = jax.random.key(0)
+    if prog.kind == "bn":
+        run = lambda: prog.run_sharded(
+            key, mesh, n_chains=n_chains, n_iters=n_iters, burn_in=0,
+            fused=fused,
+        )[1]
+    else:
+        ev = jnp.zeros((prog.mrf.height, prog.mrf.width), jnp.int32)
+        run = lambda: prog.run_sharded(
+            key, mesh, n_chains=n_chains, n_iters=n_iters, evidence=ev,
+            fused=fused,
+        )
+    jax.block_until_ready(run())  # warmup
+    t0 = time.perf_counter()
+    jax.block_until_ready(run())
+    return (time.perf_counter() - t0) / n_iters
+
+
 def _pearson(xs, ys) -> float:
     if len(xs) < 2 or np.std(xs) == 0 or np.std(ys) == 0:
         return float("nan")
@@ -126,11 +148,32 @@ def run(quick: bool = False, backend: str = "schedule",
         sched_s = _time_run(
             prog, "schedule", n_chains=n_chains, n_iters=n_iters)
         fused_s = float("nan")
+        sharded_s = sharded_fused_s = float("nan")
         if fused:
             fused_s = _time_run(
                 prog, "schedule", n_chains=n_chains, n_iters=fused_iters,
                 fused=True,
             )
+            # sharded fused-vs-unfused wall: the fused pass runs the one
+            # shard_map body (Pallas rounds + ppermute/psum collectives),
+            # the unfused pass the legacy per-device engines.  Needs a
+            # real mesh, and the grid's rows must split evenly; single-
+            # device hosts record nothing rather than a fake mesh number.
+            shard_w = 4
+            mrf_ok = (graph.kind != "mrf"
+                      or prog.mrf.height % shard_w == 0)
+            if len(jax.devices()) >= shard_w and mrf_ok:
+                from repro.core import compat
+
+                mesh = compat.make_mesh((1, shard_w), ("data", "model"))
+                sharded_s = _time_run_sharded(
+                    prog, mesh, n_chains=n_chains, n_iters=fused_iters,
+                    fused=False,
+                )
+                sharded_fused_s = _time_run_sharded(
+                    prog, mesh, n_chains=n_chains, n_iters=fused_iters,
+                    fused=True,
+                )
         measured_s = sched_s if backend == "schedule" else eager_s
         rand_measured_s = _time_run(
             rand_progs[0], backend, n_chains=n_chains, n_iters=n_iters)
@@ -159,6 +202,10 @@ def run(quick: bool = False, backend: str = "schedule",
             "eager_sweep_s": eager_s,
             "schedule_sweep_s": sched_s,
             "fused_sweep_s": fused_s if fused else None,
+            "sharded_sweep_s": sharded_s if sharded_s == sharded_s else None,
+            "sharded_fused_sweep_s": (
+                sharded_fused_s if sharded_fused_s == sharded_fused_s
+                else None),
             "random_measured_sweep_s": rand_measured_s,
             "pass_times_s": prog.diagnostics["pass_times_s"],
         }
@@ -183,7 +230,11 @@ def run(quick: bool = False, backend: str = "schedule",
             f"random_sweep_cycles={rand_cycles:.0f};"
             f"eager_sweep_us={eager_s*1e6:.0f};"
             f"schedule_sweep_us={sched_s*1e6:.0f}"
-            + (f";fused_sweep_us={fused_s*1e6:.0f}" if fused else ""),
+            + (f";fused_sweep_us={fused_s*1e6:.0f}" if fused else "")
+            + (f";sharded_sweep_us={sharded_s*1e6:.0f};"
+               f"sharded_fused_sweep_us={sharded_fused_s*1e6:.0f};"
+               f"sharded_fused_speedup={sharded_s/sharded_fused_s:.2f}"
+               if sharded_fused_s == sharded_fused_s else ""),
         ))
 
     for fam, pairs in corr_pairs.items():

@@ -246,6 +246,66 @@ def gate_bursty(quick: bool) -> dict:
             "bursty_sheds": s1["sheds"], "bursty_defers": s1["defers"]}
 
 
+def gate_sharded_fused(quick: bool) -> dict:
+    """Sharded serving, fused vs unfused, on the same pin-free grid trace:
+    both passes route every bucket through the mesh slice; the fused pass
+    executes the one-shard_map-body Pallas datapath, the unfused pass the
+    legacy per-device engines.  The speedup assertion is hard only on TPU
+    — interpret-mode Pallas on CPU hosts (with or without simulated
+    devices) bears no relation to the compiled kernel's cost, so there
+    the numbers are recorded as advisory."""
+    from repro.core import mrf as mrf_mod
+    from repro.core.graphs import GridMRF
+
+    n = 8 if quick else 16
+    mrf = GridMRF(8, 8, 3, theta=1.1, h=1.5)
+    imgs = [mrf_mod.make_denoising_problem(8, 8, 3, 0.25, seed=s)[1]
+            for s in range(4)]
+
+    def queries():
+        return [
+            Query(qid=i, model="grid", image=imgs[i % 4], n_chains=2,
+                  n_iters=8, seed=i, arrival_s=1e-5 * i)
+            for i in range(n)
+        ]
+
+    def wall_of(fused: bool) -> float:
+        cfg = dict(n_workers=4, shard_width=4, shard_min_sites=64,
+                   fused=fused)
+        clear_program_cache()
+        _engine_pass({"grid": mrf}, queries(), **cfg)  # compile pass
+        t0 = time.perf_counter()
+        eng, res = _engine_pass({"grid": mrf}, queries(), **cfg)
+        wall = time.perf_counter() - t0
+        assert len(res) == n
+        recs = eng.metrics.batch_records
+        assert recs and all(b.route == "sharded" for b in recs), (
+            "sharded-fused gate did not take the sharded route",
+            [b.route for b in recs],
+        )
+        return wall
+
+    unfused_wall = wall_of(False)
+    fused_wall = wall_of(True)
+    speedup = unfused_wall / fused_wall
+    on_tpu = jax.default_backend() == "tpu"
+    if on_tpu:
+        assert speedup > 1.0, (
+            "fused sharded serving slower than the legacy engines on "
+            "compiled hardware", fused_wall, unfused_wall,
+        )
+    else:
+        print(f"[bench_runtime] sharded fused speedup {speedup:.2f}x "
+              f"(advisory on {jax.default_backend()})", flush=True)
+    return {
+        "sharded_fused_wall_s": fused_wall,
+        "sharded_unfused_wall_s": unfused_wall,
+        "sharded_fused_speedup": speedup,
+        "sharded_fused_n_queries": n,
+        "sharded_fused_gated": "yes" if on_tpu else "advisory",
+    }
+
+
 def trace_snapshot(trace_out: str, quick: bool,
                    profile_out: str | None = None) -> dict:
     """One traced bursty engine pass: Perfetto timeline + deterministic
@@ -392,7 +452,8 @@ def run(quick: bool = False, backend: str = "schedule",
 
     # executor gates (each asserts its acceptance criterion internally)
     gates = {}
-    for gate in (gate_workers, gate_slicing, gate_calibration, gate_bursty):
+    for gate in (gate_workers, gate_slicing, gate_calibration, gate_bursty,
+                 gate_sharded_fused):
         clear_program_cache()
         t0 = time.perf_counter()
         gates.update(gate(quick))
@@ -409,6 +470,15 @@ def run(quick: bool = False, backend: str = "schedule",
         f"bursty_maxq={gates['bursty_max_queue_depth']};"
         f"bursty_shed_rate={gates['bursty_shed_rate']:.3f};"
         f"bursty_defers={gates['bursty_defers']}",
+    ))
+    rows.append(csv_row(
+        "runtime_sharded_fused",
+        gates["sharded_fused_wall_s"] * 1e6 / gates["sharded_fused_n_queries"],
+        f"backend={jax.default_backend()};"
+        f"fused_wall_s={gates['sharded_fused_wall_s']:.3f};"
+        f"unfused_wall_s={gates['sharded_unfused_wall_s']:.3f};"
+        f"fused_speedup={gates['sharded_fused_speedup']:.2f};"
+        f"gated={gates['sharded_fused_gated']}",
     ))
     if trace_out:
         rec.update(trace_snapshot(trace_out, quick,

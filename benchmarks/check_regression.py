@@ -264,6 +264,44 @@ def check_static_cost(baseline: dict, report: Report, *,
     report.meta["cost_compared"] = compared
 
 
+def check_sharded_fused(baseline: dict, report: Report) -> None:
+    """Gate the recorded sharded fused-vs-unfused serving wall.
+
+    Reads the baseline runtime suite's ``runtime_sharded_fused`` row (no
+    rerun: the runtime suite is far too slow for the PR gate) and checks
+    the fused shard_map datapath actually beat the legacy per-device
+    engines.  On interpret hosts the recorder marks the row
+    ``gated=advisory`` (CPU interpret-mode Pallas is not the compiled
+    kernel's cost) and a sub-1x speedup downgrades to a warning; a
+    ``gated=yes`` (TPU-recorded) baseline with sub-1x speedup is an
+    error."""
+    row = next(
+        (r for r in baseline.get("suites", {}).get("runtime", [])
+         if r.get("name") == "runtime_sharded_fused"), None,
+    )
+    if row is None:
+        report.meta["sharded_fused_note"] = (
+            "baseline has no runtime_sharded_fused row; regenerate it "
+            "with a full benchmarks/run.py pass"
+        )
+        return
+    derived = dict(
+        kv.split("=", 1) for kv in row.get("derived", "").split(";") if "=" in kv
+    )
+    speedup = float(derived.get("fused_speedup", "nan"))
+    gated = derived.get("gated", "advisory")
+    report.meta["sharded_fused"] = {"speedup": speedup, "gated": gated}
+    if not speedup >= 1.0:
+        report.extend([Finding(
+            "diag-perf-regression", "bench:runtime_sharded_fused",
+            f"sharded fused serving {speedup:.2f}x vs the legacy engines "
+            f"(recorded gated={gated})",
+            severity="error" if gated == "yes" else "warning",
+            fixit="profile the fused shard_map dispatch (repro.obs.profile "
+                  "roofline); on interpret hosts this is advisory noise",
+        )])
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python benchmarks/check_regression.py",
@@ -313,6 +351,7 @@ def main(argv=None) -> int:
                       ess_frac=args.ess_frac)
     if not args.skip_cost:
         check_static_cost(baseline, report, tol=args.cost_tol)
+    check_sharded_fused(baseline, report)
 
     if args.out:
         pathlib.Path(args.out).write_text(report.to_json())

@@ -88,6 +88,9 @@ class KernelFootprint:
     input_bytes: int
     intermediate_bytes: int
     breakdown: dict
+    # mesh-slice width the estimate assumes: > 1 budgets the per-shard
+    # envelope (local row slab + halo rows MRF; owned node slice BN)
+    shard_width: int = 1
 
     @property
     def total_bytes(self) -> int:
@@ -104,6 +107,8 @@ class KernelFootprint:
         budget = _VMEM_BUDGET if budget is None else budget
         total = self.total_bytes
         loc = f"{self.model}:{self.kernel}"
+        if self.shard_width > 1:
+            loc += f"@sh{self.shard_width}"
         top = max(self.breakdown, key=self.breakdown.get)
         detail = (
             f"estimated {total / 2**20:.2f} MiB resident "
@@ -161,14 +166,22 @@ def _ky_words(v: int, sampler: str, precision: int = 16,
 
 
 def bn_fused_footprint(
-    graph, n_chains: int, sampler: str = "lut_ky"
+    graph, n_chains: int, sampler: str = "lut_ky", shard_width: int = 1
 ) -> KernelFootprint:
     """Estimate `fused_gibbs_sweep`'s per-core VMEM residency for one
     model at one chain width (the batcher vmaps buckets over query lanes,
-    which batches the *grid*, so per-step residency stays one lane's)."""
+    which batches the *grid*, so per-step residency stays one lane's).
+
+    `shard_width > 1` models the sharded fused engine
+    (`distributed.bn_fused_sharded`): each device's round kernel sees only
+    its *owned node slice* — round-robin (or placement-mod) ownership
+    caps the per-device group width at ceil(c_max / shard_width) — while
+    the value block, CPT arena, and LUT stay fully resident (the psum
+    merge needs whole-state values on every device)."""
     b = int(n_chains)
     n = graph.n_nodes
     c, f, s = bn_group_envelope(graph)
+    c = -(-c // max(1, int(shard_width)))  # per-device owned slice
     v = max(graph.cards) if graph.cards else 0
     w = _ky_words(v, sampler)
     arena = _bn_arena_size(graph.source)
@@ -193,22 +206,30 @@ def bn_fused_footprint(
         kernel="bn_fused", model=graph.name, n_chains=b, sampler=sampler,
         input_bytes=sum(inputs.values()) * ITEM_BYTES,
         intermediate_bytes=sum(inter.values()) * ITEM_BYTES,
-        breakdown=breakdown,
+        breakdown=breakdown, shard_width=int(shard_width),
     )
 
 
 def mrf_fused_footprint(
-    graph, n_chains: int, sampler: str = "lut_ky", block_h: int = 32
+    graph, n_chains: int, sampler: str = "lut_ky", block_h: int = 32,
+    shard_width: int = 1,
 ) -> KernelFootprint:
     """Estimate `mrf_half_step_kernel`'s residency for one model.  Chains
     (and bucket lanes) are vmapped over the kernel, which batches the
     *grid* — grid steps execute sequentially, so per-step residency is one
     chain's (block_h, W) tile regardless of `n_chains` (kept in the record
-    for the fit-cache key and the report)."""
+    for the fit-cache key and the report).
+
+    `shard_width > 1` models the sharded fused engine
+    (`distributed.mrf_fused_sharded` via `mrf_halo_half_step_kernel`):
+    each device tiles its *local row slab* of height // shard_width rows,
+    with the two ppermute'd halo rows and the traced row offset resident
+    beside the tile."""
     b = int(n_chains)
     mrf = graph.source
     height, width = int(mrf.height), int(mrf.width)
-    bh = min(block_h, height)
+    h_loc = -(-height // max(1, int(shard_width)))
+    bh = min(block_h, h_loc)
     v = int(mrf.n_labels)
     sites = bh * width
     w = _ky_words(v, sampler)
@@ -218,6 +239,9 @@ def mrf_fused_footprint(
         "random_words": sites * w,
         "exp_lut": EXP_LUT_SIZE,
     }
+    if shard_width > 1:
+        # the slab-edge halo rows + the (1, 1) row-offset ref
+        inputs["halo_rows"] = 2 * width + 1
     inter = {
         "neighbor_shifts": 4 * sites,
         "energies": (2 * v + 1) * sites,  # energies + z columns + e_max
@@ -228,16 +252,17 @@ def mrf_fused_footprint(
         kernel="mrf_fused", model=graph.name, n_chains=b, sampler=sampler,
         input_bytes=sum(inputs.values()) * ITEM_BYTES,
         intermediate_bytes=sum(inter.values()) * ITEM_BYTES,
-        breakdown=breakdown,
+        breakdown=breakdown, shard_width=int(shard_width),
     )
 
 
 def estimate_footprint(
-    graph, n_chains: int, sampler: str = "lut_ky"
+    graph, n_chains: int, sampler: str = "lut_ky", shard_width: int = 1
 ) -> KernelFootprint:
     if graph.kind == "bn":
-        return bn_fused_footprint(graph, n_chains, sampler)
-    return mrf_fused_footprint(graph, n_chains, sampler)
+        return bn_fused_footprint(graph, n_chains, sampler, shard_width)
+    return mrf_fused_footprint(graph, n_chains, sampler,
+                               shard_width=shard_width)
 
 
 # fit verdicts memoized by content hash — bucket_key calls this per query,
@@ -245,15 +270,19 @@ def estimate_footprint(
 _FIT_CACHE: dict[tuple, bool] = {}
 
 
-def fused_fits(graph, n_chains: int, sampler: str = "lut_ky") -> bool:
+def fused_fits(graph, n_chains: int, sampler: str = "lut_ky",
+               shard_width: int = 1) -> bool:
     """Demotion oracle for `runtime.batcher.fused_eligible`: does this
-    (model, chain width, sampler) bucket fit the fused kernel's VMEM
-    budget?  False means "route unfused" — bit-exact, just slower —
-    instead of OOMing on device."""
-    key = (graph.ir_key, int(n_chains), sampler, _VMEM_BUDGET)
+    (model, chain width, sampler, mesh-slice width) bucket fit the fused
+    kernel's VMEM budget?  False means "route unfused" — bit-exact, just
+    slower — instead of OOMing on device.  Sharded buckets
+    (`shard_width > 1`) are judged on the per-shard envelope, since that
+    is what each device of the shard_map body actually allocates."""
+    key = (graph.ir_key, int(n_chains), sampler, int(shard_width),
+           _VMEM_BUDGET)
     hit = _FIT_CACHE.get(key)
     if hit is None:
-        fp = estimate_footprint(graph, n_chains, sampler)
+        fp = estimate_footprint(graph, n_chains, sampler, shard_width)
         hit = fp.total_bytes <= _VMEM_BUDGET
         _FIT_CACHE[key] = hit
     return hit

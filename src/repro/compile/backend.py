@@ -495,26 +495,98 @@ def cross_check(program, ex=None) -> None:
         )
 
 
-def cross_check_fused(program, ex: BNScheduleExec, sampler: str = "lut_ky"
-                      ) -> None:
-    """First-use guarantee for the fused BN kernel path: before the Pallas
+def _check_mesh(program, mesh=None):
+    """A tiny mesh for the sharded cross-check leg: (1, w) over the host's
+    devices, with w a legal shard width for the program (divides the MRF
+    grid height; any width partitions BN nodes).  A single available device
+    still exercises the full shard_map body (self-permute halos)."""
+    if mesh is not None:
+        return mesh
+    n_dev = len(jax.devices())
+    if program.kind == "mrf":
+        h = program.mrf.height
+        w = next(d for d in range(min(n_dev, h), 0, -1) if h % d == 0)
+    else:
+        w = min(2, n_dev)
+    from repro.core import compat
+
+    return compat.make_mesh((1, w), ("data", "model"))
+
+
+def cross_check_fused(
+    program, ex, sampler: str = "lut_ky", *, sharded: bool = False,
+    mesh=None,
+) -> None:
+    """First-use guarantee for the fused kernel paths: before a Pallas
     round kernel ever serves a program, a tiny fused run must match the
-    eager engine bit for bit (the eager side never touches the kernel, so
-    a word-derivation or layout drift in `kernels/bn_gibbs.py` is caught
-    here, not in production posteriors)."""
+    eager engine bit for bit (the eager side never touches the kernels, so
+    a word-derivation or layout drift in `kernels/bn_gibbs.py` /
+    `kernels/mrf_gibbs.py` is caught here, not in production posteriors).
+
+    `sharded=True` additionally runs the one-shard_map-body engine
+    (`core/distributed.py`) on a tiny mesh and requires its bits to match
+    the single-device fused run AND (transitively) eager — the acceptance
+    invariant of the sharded-fused datapath.  Checked lazily at first
+    sharded-fused use (`CompiledProgram.ensure_fused_cross_check`), so
+    single-device fused serving never pays the shard_map compile."""
     import numpy as np
 
     key = jax.random.key(_CHECK_KEY)
-    kwargs = dict(n_chains=_CHECK_CHAINS, n_iters=_CHECK_ITERS, burn_in=0,
+    kwargs = dict(n_chains=_CHECK_CHAINS, n_iters=_CHECK_ITERS,
                   sampler=sampler)
-    marg_e, vals_e = bnet.run_gibbs(program.cbn, key, **kwargs)
-    marg_f, vals_f = run_bn_schedule(ex, key, fused=True, **kwargs)
-    if not ((np.asarray(vals_e) == np.asarray(vals_f)).all()
-            and (np.asarray(marg_e) == np.asarray(marg_f)).all()):
+    if program.kind == "bn":
+        marg_e, vals_e = bnet.run_gibbs(program.cbn, key, burn_in=0,
+                                        **kwargs)
+        marg_f, vals_f = run_bn_schedule(ex, key, fused=True, burn_in=0,
+                                         **kwargs)
+        if not ((np.asarray(vals_e) == np.asarray(vals_f)).all()
+                and (np.asarray(marg_e) == np.asarray(marg_f)).all()):
+            raise BackendMismatch(
+                f"fused BN rounds diverged from eager on program "
+                f"{program.program_key[:12]} (sampler={sampler})"
+            )
+        if sharded:
+            from repro.core import distributed as dist_mod
+
+            marg_s, vals_s = dist_mod.run_program_sharded(
+                program, key, _check_mesh(program, mesh), burn_in=0,
+                backend="schedule", fused=True, **kwargs,
+            )
+            if not ((np.asarray(vals_s) == np.asarray(vals_f)).all()
+                    and (np.asarray(marg_s) == np.asarray(marg_f)).all()):
+                raise BackendMismatch(
+                    f"sharded fused BN rounds diverged from single-device "
+                    f"fused on program {program.program_key[:12]} "
+                    f"(sampler={sampler})"
+                )
+        return
+    mrf = program.mrf
+    ev = jnp.zeros((mrf.height, mrf.width), jnp.int32)
+    pin_mask = pin_vals = None
+    if program.ir.evidence:  # baked pins bind the eager side too
+        pin_mask, pin_vals = pin_arrays(mrf, program.ir.evidence)
+    lab_e = mrf_mod.run_mrf_gibbs(
+        mrf, ev, key, pin_mask=pin_mask, pin_vals=pin_vals, **kwargs
+    )
+    lab_f = run_mrf_schedule(ex, ev, key, fused=True, **kwargs)
+    if not (np.asarray(lab_e) == np.asarray(lab_f)).all():
         raise BackendMismatch(
-            f"fused BN rounds diverged from eager on program "
+            f"fused MRF rounds diverged from eager on program "
             f"{program.program_key[:12]} (sampler={sampler})"
         )
+    if sharded:
+        from repro.core import distributed as dist_mod
+
+        lab_s = dist_mod.run_program_sharded(
+            program, key, _check_mesh(program, mesh), evidence=ev,
+            backend="schedule", fused=True, **kwargs,
+        )
+        if not (np.asarray(lab_s) == np.asarray(lab_f)).all():
+            raise BackendMismatch(
+                f"sharded fused MRF rounds diverged from single-device "
+                f"fused on program {program.program_key[:12]} "
+                f"(sampler={sampler})"
+            )
 
 
 def cross_check_clamped(program, ex: BNScheduleExec) -> None:

@@ -109,24 +109,32 @@ class CompiledProgram:
             self._schedule_exec = ex
         return self._schedule_exec
 
-    def ensure_fused_cross_check(self, sampler: str) -> None:
-        """First-use gate for the fused BN kernel path (mirrors the
-        schedule backend's first-lowering check): a tiny fused run must
-        match the eager engine bit for bit before `fused=True` ever serves
-        this program with this sampler.  Cached per sampler — the check
-        runs once, the guarantee holds for the program's lifetime."""
-        if self.kind != "bn":
-            raise TypeError(f"fused BN path on kind={self.kind!r} program")
-        if sampler in self._fused_checked:
+    def ensure_fused_cross_check(
+        self, sampler: str, *, sharded: bool = False, mesh=None
+    ) -> None:
+        """First-use gate for the fused kernel paths (mirrors the schedule
+        backend's first-lowering check): a tiny fused run must match the
+        eager engine bit for bit before `fused=True` ever serves this
+        program with this sampler.  `sharded=True` extends the guarantee to
+        the one-shard_map-body engines in `core/distributed.py` (bits must
+        also match the single-device fused run) and is checked lazily at
+        first *sharded* fused use, so single-device serving never pays the
+        shard_map compile.  Cached per (sampler, route) — each check runs
+        once, the guarantee holds for the program's lifetime (the
+        single-device tag stays the bare sampler name: it predates the
+        sharded leg and callers key on it)."""
+        tag = (sampler, "sharded") if sharded else sampler
+        if tag in self._fused_checked:
             return
         with tracer.span(
             "cross_check_fused", cat="compile", program=self.program_key,
-            sampler=sampler,
+            sampler=sampler, sharded=sharded,
         ):
             backend_mod.cross_check_fused(
-                self, self.schedule_executable(), sampler
+                self, self.schedule_executable(), sampler,
+                sharded=sharded, mesh=mesh,
             )
-        self._fused_checked.add(sampler)
+        self._fused_checked.add(tag)
 
     def clamped_executable(self, clamp_nodes: tuple[int, ...], backend: str):
         """Round-ordered gather groups specialized for a runtime-evidence
@@ -384,6 +392,8 @@ class CompiledProgram:
                 self.mrf, self.ir.evidence
             )
         if backend == "schedule":
+            if fused:
+                self.ensure_fused_cross_check(sampler)
             if (profile_mod.enabled() and carry_state is None
                     and not diagnostics and pin_mask is None):
                 profile_mod.capture_program(
@@ -431,23 +441,125 @@ class CompiledProgram:
         sampler: str = "lut_ky",
         evidence: jax.Array | None = None,
         backend: str = "schedule",
+        fused: bool = False,
+        thin: int = 1,
+        carry_state=None,
+        return_state: bool = False,
+        diagnostics: bool = False,
+        profile_sig: str | None = None,
         **axes,
     ):
         """shard_map execution across a device mesh; node ownership follows
         this program's placement (see distributed.run_program_sharded).
         With backend="schedule" (the default, like `run()`), rounds come
         from this program's schedule and each round's comm op is routed onto
-        its named collective; backend="eager" is the escape hatch."""
+        its named collective; backend="eager" is the escape hatch.
+
+        `fused=True` runs the one-shard_map-body engines: the same Pallas
+        color-round kernels as single-device `run(fused=True)`, with
+        `lax.ppermute` halos / `lax.psum` merges between kernel calls, all
+        inside the scanned loop.  The draw stream is bit-identical to the
+        single-device fused run (asserted at first sharded-fused use), so
+        `thin` / `carry_state` / `return_state` / `diagnostics` carry the
+        exact `run()` contracts — a query may be sliced across a route
+        boundary and resume on either side."""
         if self.kind == "bn" and evidence is not None:
             raise ValueError(
                 "runtime evidence clamps are a single-device serving path; "
                 "bake the evidence for sharded execution"
             )
-        return dist_mod.run_program_sharded(
+        if not fused:
+            if carry_state is not None or return_state or diagnostics:
+                raise ValueError(
+                    "carry_state/return_state/diagnostics ride the fused "
+                    "sharded datapath; pass fused=True"
+                )
+            if thin != 1:
+                raise ValueError(
+                    "thin rides the fused sharded datapath; pass fused=True"
+                )
+            return dist_mod.run_program_sharded(
+                self, key, mesh, n_chains=n_chains, n_iters=n_iters,
+                burn_in=burn_in, sampler=sampler, evidence=evidence,
+                backend=backend, **axes,
+            )
+        if backend != "schedule":
+            raise ValueError("fused execution requires backend='schedule'")
+        if thin < 1:
+            raise ValueError(f"thin must be >= 1, got {thin}")
+        if carry_state is None and key is None:
+            raise ValueError("a fresh run (carry_state=None) needs a PRNG key")
+        self.ensure_fused_cross_check(sampler, sharded=True)
+        diag_total = None
+        if diagnostics:
+            if carry_state is None:
+                diag_total = jnp.asarray(n_iters, jnp.int32)
+            elif getattr(carry_state, "quality", None) is None:
+                raise ValueError(
+                    "diagnostics=True on a resumed run needs a carry from a "
+                    "run that was itself started with diagnostics=True (the "
+                    "accumulator lives in the chain state)"
+                )
+        inner_state = return_state or diagnostics
+        if self.kind == "bn":
+            if carry_state is not None and not isinstance(
+                carry_state, bnet.BNChainState
+            ):
+                raise TypeError(
+                    "BN programs resume from a bayesnet.BNChainState, got "
+                    f"{type(carry_state).__name__}"
+                )
+            burn_in = 50 if burn_in is None else burn_in
+        else:
+            if carry_state is not None and not isinstance(
+                carry_state, mrf_mod.MRFChainState
+            ):
+                raise TypeError(
+                    "MRF programs resume from an mrf.MRFChainState, got "
+                    f"{type(carry_state).__name__}"
+                )
+            if evidence is None:
+                raise ValueError(
+                    "MRF programs take the evidence image at run_sharded()"
+                )
+            if burn_in is not None:
+                raise ValueError(
+                    "MRF programs return final states only; burn_in does "
+                    "not apply"
+                )
+            if thin != 1:
+                raise ValueError(
+                    "MRF programs return final states only; thin does not "
+                    "apply"
+                )
+        out = dist_mod.run_program_sharded(
             self, key, mesh, n_chains=n_chains, n_iters=n_iters,
             burn_in=burn_in, sampler=sampler, evidence=evidence,
-            backend=backend, **axes,
+            backend=backend, fused=True, thin=thin, carry=carry_state,
+            return_state=inner_state, diag_total=diag_total,
+            profile_sig=profile_sig, **axes,
         )
+        if not diagnostics:
+            return out
+        if self.kind == "bn":
+            marginals, vals, state = out
+            total_kept = None
+            if carry_state is None:
+                total_kept = max((n_iters - burn_in + thin - 1) // thin, 0)
+            snap = self._summarize_quality(
+                state, free_mask=None, total_kept=total_kept
+            )
+            if return_state:
+                return marginals, vals, snap, state
+            return marginals, vals, snap
+        labels, state = out
+        snap = self._summarize_quality(
+            state, free_mask=None,
+            total_kept=n_iters if carry_state is None else None,
+        )
+        if return_state:
+            return labels, snap, state
+        return labels, snap
 
 
 def _compile_uncached(

@@ -28,10 +28,15 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import bayesnet as bnet
 from repro.core import compat
+from repro.core import ky as ky_core
+from repro.core import mrf as mrf_mod
 from repro.core.draws import draw_from_logits
 from repro.core.graphs import GridMRF
 from repro.core.interp import build_exp_weight_lut
 from repro.core.mapping import MeshPlacement
+from repro.diag import accum as diag_accum
+from repro.kernels import bn_gibbs
+from repro.kernels import mrf_gibbs as mrf_kernels
 
 # ---------------------------------------------------------------------------
 # MRF: row-partitioned grid with ppermute halo exchange
@@ -306,9 +311,417 @@ def bn_gibbs_sharded(
 
 
 # ---------------------------------------------------------------------------
-# Compiled-program entry point (repro.compile emits CompiledProgram artifacts;
-# this is their shard_map backend — duck-typed to avoid a circular import)
+# Fused sharded engines: ONE shard_map body wraps the Pallas round kernel and
+# its collectives, so the sharded route executes the same VMEM-resident
+# datapath as single-device fused (the mesh-scale inter-core register-sharing
+# analogue).  Bit-exact with the single-device fused schedule backend: the
+# random stream is generated over the full grid/round on every device and
+# sliced/gathered to the local shard, so each site consumes exactly the words
+# the unsharded kernel would hand it.
 # ---------------------------------------------------------------------------
+
+
+def _quality_spec(chain_axis: str | None, site_axis: str | None):
+    """PartitionSpecs for a `QualityAccum` carry: the (…, B, S, V) moment
+    leaves shard over the chain and/or site axes; the scalar counters are
+    replicated (their update depends only on the keep gate, which every
+    device computes identically)."""
+    return diag_accum.QualityAccum(
+        counts=P(),
+        mean=P(None, chain_axis, site_axis, None),
+        m2=P(None, chain_axis, site_axis, None),
+        split_at=P(),
+        batch_len=P(),
+        bm_count=P(),
+        bm_mean=P(chain_axis, site_axis, None),
+        bm_m2=P(chain_axis, site_axis, None),
+        cur_sum=P(chain_axis, site_axis, None),
+        cur_n=P(),
+    )
+
+
+def mrf_fused_sharded(
+    mrf: GridMRF,
+    evidence: jax.Array,  # (H, W) int32
+    key: jax.Array | None,
+    mesh: jax.sharding.Mesh,
+    *,
+    n_chains: int,
+    n_iters: int,
+    parities: tuple[int, ...],
+    carry: mrf_mod.MRFChainState | None = None,
+    return_state: bool = False,
+    diag_total=None,
+    diag_batch: int = diag_accum.DEFAULT_BATCH_LEN,
+    chain_axis: str = "data",
+    grid_axis: str = "model",
+    interpret: bool | None = None,
+    profile_sig: str | None = None,
+):
+    """The fused MRF schedule rounds inside one `shard_map` body: per shard,
+    one `pallas_call` half-step over the local row slab per round, with the
+    halo rows exchanged via `lax.ppermute` (the `ppermute_halo` mechanism)
+    between rounds — comm and compute in a single scanned body instead of
+    separate engine ops.
+
+    Bit-exact with `compile/backend.run_mrf_schedule(fused=True)`: the init,
+    key-split structure, and per-site word streams are identical (full-grid
+    streams sliced to the slab), so carries cross the vmap<->sharded route
+    boundary freely and sliced serving rides the sharded route.  The
+    `MRFChainState` carry shards its labels (and `QualityAccum` site-moment
+    leaves) over `grid_axis`; pins never route here (`executor.route`
+    excludes them)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    exp_table, exp_spec = build_exp_weight_lut()
+    n_grid = mesh.shape[grid_axis]
+    n_chain_dev = mesh.shape[chain_axis]
+    if mrf.height % n_grid != 0:
+        raise ValueError(
+            f"grid height {mrf.height} must divide over {n_grid} devices"
+        )
+    if n_chains % n_chain_dev != 0:
+        raise ValueError(
+            f"n_chains {n_chains} must divide over {n_chain_dev} devices"
+        )
+    h_loc = mrf.height // n_grid
+    b_loc = n_chains // n_chain_dev
+
+    if carry is None:
+        labels, key = mrf_mod.init_labels(mrf, key, n_chains)
+        quality = None
+        if diag_total is not None:
+            quality = diag_accum.make_accum(
+                n_chains, mrf.height * mrf.width, mrf.n_labels,
+                jnp.asarray(diag_total, jnp.int32), diag_batch,
+            )
+    else:
+        labels, key, quality = carry.labels, carry.key, carry.quality
+
+    qspec = None
+    if quality is not None:
+        qspec = _quality_spec(chain_axis, grid_axis)
+    lab_spec = P(chain_axis, grid_axis, None)
+
+    def body(labels, key, quality, ev_loc):
+        gi = jax.lax.axis_index(grid_axis)
+        ci = jax.lax.axis_index(chain_axis)
+        row0 = gi * h_loc
+        chain0 = ci * b_loc
+
+        def it(t, st):
+            labels, key, quality = st
+            ks = jax.random.split(key, 1 + len(parities))
+            for i, parity in enumerate(parities):
+                up_halo, down_halo = _halo_exchange(labels, grid_axis)
+                labels = mrf_kernels.mrf_sharded_round_step(
+                    mrf, labels, ev_loc, ks[1 + i], parity, exp_table,
+                    exp_spec, row0=row0, chain0=chain0,
+                    n_chains_total=n_chains, up_halo=up_halo,
+                    down_halo=down_halo, interpret=interpret,
+                )
+            if quality is not None:
+                onehot = (
+                    labels.reshape(labels.shape[0], -1)[..., None]
+                    == jnp.arange(mrf.n_labels, dtype=labels.dtype)
+                ).astype(jnp.int32)
+                quality = diag_accum.update(quality, onehot,
+                                            jnp.asarray(True))
+            return labels, ks[0], quality
+
+        return jax.lax.fori_loop(0, n_iters, it, (labels, key, quality))
+
+    f = compat.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(lab_spec, P(), qspec, P(grid_axis, None)),
+        out_specs=(lab_spec, P(), qspec),
+        check_vma=False,
+    )
+    jf = jax.jit(f)
+    args = (labels, key, quality, evidence)
+    _maybe_capture(profile_sig, jf, args, mesh, kind="mrf",
+                   model=getattr(mrf, "name", None), sampler="lut_ky",
+                   fused=True, n_chains=n_chains, n_iters=n_iters)
+    labels, key, quality = jf(*args)
+    if return_state:
+        return labels, mrf_mod.MRFChainState(
+            labels=labels, key=key, quality=quality
+        )
+    return labels
+
+
+@dataclasses.dataclass
+class ShardedFusedRounds:
+    """The fused-BN round tables partitioned over n_dev devices.
+
+    Like `BNFusedRounds` but with a leading (n_dev,) ownership axis (the
+    Sec. IV-B node->core mapping) and a `word_pos` gather table: each local
+    node's position in its round's *full* group ordering, so every device
+    can slice its rows out of the full random-word stream — the key to
+    sharded draws being bit-identical to the single-device kernel's.
+    Pad slots carry node id n_nodes (dropped by the one-hot scatter),
+    cards 0 (masked to NEG_INF) and word_pos 0 (a real row whose draw is
+    discarded)."""
+
+    nodes: jax.Array  # (n_dev, R, C) int32
+    cards: jax.Array  # (n_dev, R, C) int32
+    base: jax.Array  # (n_dev, R, C, F) int32
+    stride: jax.Array  # (n_dev, R, C, F, S) int32
+    scope_var: jax.Array
+    is_self: jax.Array
+    word_pos: jax.Array  # (n_dev, R, C) int32
+    n_c: tuple[int, ...]  # static: full real node count per round
+    c_max: int  # static: local per-device node envelope
+    f_max: int
+    s_max: int
+
+
+jax.tree_util.register_dataclass(
+    ShardedFusedRounds,
+    ["nodes", "cards", "base", "stride", "scope_var", "is_self", "word_pos"],
+    ["n_c", "c_max", "f_max", "s_max"],
+)
+
+
+def build_sharded_fused_rounds(
+    cbn: bnet.CompiledBayesNet,
+    groups: list[bnet.ColorGroup],
+    n_dev: int,
+    placement: MeshPlacement | None = None,
+) -> ShardedFusedRounds:
+    """Partition each round's gather tensors across devices (same ownership
+    rule as `shard_bn_groups`: placed core modulo n_dev, else round-robin)
+    and stack them on a rounds axis padded to the common local envelope."""
+    parts_by_round = []
+    for g in groups:
+        nodes = np.asarray(g.nodes)
+        if placement is not None:
+            owner = placement.placement[nodes] % n_dev
+        else:
+            owner = np.arange(len(nodes)) % n_dev
+        parts_by_round.append([np.where(owner == d)[0] for d in range(n_dev)])
+    c_max = max(
+        1, max(len(p) for parts in parts_by_round for p in parts)
+    )
+    f_max = max(g.base.shape[1] for g in groups)
+    s_max = max(g.stride.shape[2] for g in groups)
+    n_rounds = len(groups)
+
+    def table(field, pad_value=0, extra=()):
+        res = np.full((n_dev, n_rounds, c_max) + extra, pad_value, np.int32)
+        return res
+
+    nodes = table("nodes", cbn.n_nodes)
+    cards = table("cards", 0)
+    base = table("base", 0, (f_max,))
+    stride = table("stride", 0, (f_max, s_max))
+    scope_var = table("scope_var", 0, (f_max, s_max))
+    is_self = table("is_self", 0, (f_max, s_max))
+    word_pos = table("word_pos", 0)
+    for r, (g, parts) in enumerate(zip(groups, parts_by_round)):
+        g_nodes = np.asarray(g.nodes)
+        g_cards = np.asarray(g.cards)
+        g_base = np.asarray(g.base)
+        g_stride = np.asarray(g.stride)
+        g_scope = np.asarray(g.scope_var)
+        g_self = np.asarray(g.is_self).astype(np.int32)
+        f, s = g_base.shape[1], g_stride.shape[2]
+        for d, p in enumerate(parts):
+            k = len(p)
+            nodes[d, r, :k] = g_nodes[p]
+            cards[d, r, :k] = g_cards[p]
+            base[d, r, :k, :f] = g_base[p]
+            stride[d, r, :k, :f, :s] = g_stride[p]
+            scope_var[d, r, :k, :f, :s] = g_scope[p]
+            is_self[d, r, :k, :f, :s] = g_self[p]
+            word_pos[d, r, :k] = p
+    return ShardedFusedRounds(
+        nodes=jnp.asarray(nodes), cards=jnp.asarray(cards),
+        base=jnp.asarray(base), stride=jnp.asarray(stride),
+        scope_var=jnp.asarray(scope_var), is_self=jnp.asarray(is_self),
+        word_pos=jnp.asarray(word_pos),
+        n_c=tuple(int(np.asarray(g.nodes).shape[0]) for g in groups),
+        c_max=c_max, f_max=f_max, s_max=s_max,
+    )
+
+
+def bn_fused_sharded(
+    cbn: bnet.CompiledBayesNet,
+    key: jax.Array | None,
+    mesh: jax.sharding.Mesh,
+    *,
+    n_chains: int,
+    n_iters: int,
+    burn_in: int,
+    sampler: str = "lut_ky",
+    thin: int = 1,
+    placement: MeshPlacement | None = None,
+    groups: list[bnet.ColorGroup] | None = None,
+    carry: bnet.BNChainState | None = None,
+    return_state: bool = False,
+    diag_total=None,
+    diag_batch: int = diag_accum.DEFAULT_BATCH_LEN,
+    chain_axis: str = "data",
+    node_axis: str = "model",
+    interpret: bool | None = None,
+    profile_sig: str | None = None,
+):
+    """The fused BN color rounds inside one `shard_map` body: per round, one
+    grid=(1,) `pallas_call` (`kernels/bn_gibbs.fused_color_round`) over the
+    device's owned node slice, then the disjoint state deltas merge with the
+    `psum_broadcast` collective — all inside the scanned sweep loop.
+
+    Bit-exact with `compile/backend.run_bn_schedule(fused=True)`: the same
+    `bn_round_step` kernel runs per round, the init/key-split/keep-gate
+    structure matches `bayesnet.gibbs_run_loop`, and each device gathers its
+    word rows out of the round's full stream via `word_pos`.  The
+    `BNChainState` carry shards its vals/quality chain leaves over
+    `chain_axis`; the histogram is merged exactly (int32 psum)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    bn_gibbs.check_fused_sampler(sampler)
+    groups = cbn.groups if groups is None else groups
+    n_dev = mesh.shape[node_axis]
+    n_chain_dev = mesh.shape[chain_axis]
+    if n_chains % n_chain_dev != 0:
+        raise ValueError(
+            f"n_chains {n_chains} must divide over {n_chain_dev} devices"
+        )
+    b_loc = n_chains // n_chain_dev
+    v = cbn.max_card
+    weight_bits = 8 if sampler == "lut_ky" else 15
+    precision = max(16, weight_bits + (v - 1).bit_length() + 1)
+    max_retries = 8
+    total_steps = precision * max_retries
+    n_words = -(-total_steps // 32)
+    sfr = build_sharded_fused_rounds(cbn, groups, n_dev, placement)
+    logf = jnp.reshape(cbn.log_flat, (1, -1))
+    tab = jnp.reshape(cbn.exp_table, (1, -1)).astype(jnp.float32)
+    n_rounds = len(sfr.n_c)
+
+    if carry is None:
+        vals, key = bnet.init_chain_values(cbn, key, n_chains)
+        quality = None
+        if diag_total is not None:
+            quality = diag_accum.make_accum(
+                n_chains, cbn.n_nodes, cbn.max_card,
+                diag_accum.kept_count(diag_total, burn_in, thin), diag_batch,
+            )
+        carry = bnet.BNChainState(
+            vals=vals, key=key,
+            hist=jnp.zeros((cbn.n_nodes, cbn.max_card), jnp.int32),
+            t=jnp.zeros((), jnp.int32), quality=quality,
+        )
+    quality = carry.quality
+
+    qspec = None
+    if quality is not None:
+        qspec = _quality_spec(chain_axis, None)
+    table_spec = jax.tree_util.tree_map(
+        lambda _: P(node_axis), sfr,
+        is_leaf=lambda x: isinstance(x, jax.Array),
+    )
+
+    def body(vals, key, hist0, t0, quality, sfr_loc):
+        ci = jax.lax.axis_index(chain_axis)
+        chain0 = ci * b_loc
+        nodes = sfr_loc.nodes[0]  # (R, C)
+        cards = sfr_loc.cards[0]
+        base = sfr_loc.base[0]
+        stride = sfr_loc.stride[0]
+        scope_var = sfr_loc.scope_var[0]
+        is_self = sfr_loc.is_self[0]
+        word_pos = sfr_loc.word_pos[0]
+
+        def sweep(vals, sub):
+            keys = jax.random.split(sub, n_rounds)
+            for r in range(n_rounds):
+                nc_r = sfr.n_c[r]
+                # the round's FULL word stream — byte-for-byte what the
+                # single-device kernel draws — sliced to local chains and
+                # gathered to the owned nodes' rows
+                wr = ky_core.random_words(
+                    keys[r], (n_chains * nc_r,), n_words
+                ).reshape(n_chains, nc_r, n_words)
+                wr = jax.lax.dynamic_slice_in_dim(wr, chain0, b_loc, axis=0)
+                wr = jnp.take(wr, word_pos[r], axis=1)  # (b_loc, C, W)
+                new_vals = bn_gibbs.fused_color_round(
+                    vals, nodes[r], cards[r], base[r], stride[r],
+                    scope_var[r], is_self[r], wr, logf, tab,
+                    sampler=sampler, exp_spec=cbn.exp_spec, v_max=v,
+                    n_words=n_words, weight_bits=weight_bits,
+                    precision=precision, total_steps=total_steps,
+                    interpret=interpret,
+                )
+                # disjoint ownership => one int psum merges all updates
+                # (the psum_broadcast mechanism, exact in int32)
+                vals = vals + jax.lax.psum(new_vals - vals, node_axis)
+            return vals
+
+        delta0 = jnp.zeros_like(hist0)
+
+        def it(_, st):
+            vals, key, delta, t, quality = st
+            key, sub = jax.random.split(key)
+            vals = sweep(vals, sub)
+            onehot = (
+                vals[..., None]
+                == jnp.arange(cbn.max_card, dtype=jnp.int32)
+            ).astype(jnp.int32)
+            keep = (t >= burn_in) & ((t - burn_in) % thin == 0)
+            delta = delta + jnp.where(keep, onehot.sum(0), 0)
+            if quality is not None:
+                quality = diag_accum.update(quality, onehot, keep)
+            return vals, key, delta, t + 1, quality
+
+        vals, key, delta, t, quality = jax.lax.fori_loop(
+            0, n_iters, it, (vals, key, delta0, t0, quality)
+        )
+        hist = hist0 + jax.lax.psum(delta, chain_axis)
+        return vals, key, hist, t, quality
+
+    f = compat.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(chain_axis, None), P(), P(), P(), qspec, table_spec),
+        out_specs=(P(chain_axis, None), P(), P(), P(), qspec),
+        check_vma=False,
+    )
+    jf = jax.jit(f)
+    args = (carry.vals, carry.key, carry.hist, carry.t, quality, sfr)
+    _maybe_capture(profile_sig, jf, args, mesh, kind="bn",
+                   model=getattr(cbn, "name", None), sampler=sampler,
+                   fused=True, n_chains=n_chains, n_iters=n_iters)
+    vals, key, hist, t, quality = jf(*args)
+    out = bnet.BNChainState(vals=vals, key=key, hist=hist, t=t,
+                            quality=quality)
+    card_mask = (
+        jnp.arange(cbn.max_card, dtype=jnp.int32)[None] < cbn.cards[:, None]
+    )
+    denom = jnp.maximum(hist.sum(-1, keepdims=True), 1)
+    marginals = jnp.where(card_mask, hist / denom, 0.0)
+    if return_state:
+        return marginals, vals, out
+    return marginals, vals
+
+
+def _maybe_capture(profile_sig, jf, args, mesh, **meta) -> None:
+    """Stamp the shard_map executable into the profile registry (when
+    profiling is on): the sharded-fused HLO is where the collective-permute
+    / all-reduce bytes live, and `obs.profile.join_dispatches` attributes
+    sharded dispatches by this signature like any other bucket."""
+    if profile_sig is None:
+        return
+    from repro.obs import profile as profile_mod
+
+    reg = profile_mod.get()
+    if reg is None:
+        return
+    reg.capture(
+        profile_sig, lambda: jf.lower(*args), n_chips=mesh.size,
+        route="sharded", **meta,
+    )
 
 
 def _check_comm_mechanisms(program, expected: str) -> None:
@@ -327,7 +740,7 @@ def _check_comm_mechanisms(program, expected: str) -> None:
 
 def run_program_sharded(
     program,
-    key: jax.Array,
+    key: jax.Array | None,
     mesh: jax.sharding.Mesh,
     *,
     n_chains: int = 32,
@@ -336,6 +749,13 @@ def run_program_sharded(
     sampler: str = "lut_ky",
     evidence: jax.Array | None = None,
     backend: str = "eager",
+    fused: bool = False,
+    thin: int = 1,
+    carry=None,
+    return_state: bool = False,
+    diag_total=None,
+    diag_batch: int = diag_accum.DEFAULT_BATCH_LEN,
+    profile_sig: str | None = None,
     **axes,
 ):
     """Execute a `repro.compile.CompiledProgram` across a device mesh.
@@ -349,9 +769,26 @@ def run_program_sharded(
     compiled `Schedule` (via the program's lowered executable), and each
     round's comm ops are routed onto the collectives their mechanisms name:
     `psum_broadcast` -> the per-round `lax.psum` of the disjoint state
-    delta, `ppermute_halo` -> the `lax.ppermute` boundary-row exchange."""
+    delta, `ppermute_halo` -> the `lax.ppermute` boundary-row exchange.
+
+    `fused=True` (schedule backend only) executes the whole run through ONE
+    shard_map body wrapping the Pallas round kernels and those collectives
+    (`mrf_fused_sharded` / `bn_fused_sharded`) — bit-exact with the
+    single-device fused backend, so `carry`/`return_state` slicing and the
+    `diag_total` quality accumulator are supported there (and only there:
+    the legacy per-device-folded engines have neither a shared key
+    structure nor carry pytrees)."""
     if backend not in ("eager", "schedule"):
         raise ValueError(f"unknown backend {backend!r}")
+    if fused and backend != "schedule":
+        raise ValueError("fused sharded execution is schedule-backend only")
+    if not fused and (carry is not None or return_state
+                      or diag_total is not None):
+        raise ValueError(
+            "carry/return_state/diag_total ride the fused sharded route "
+            "only (the legacy sharded engines fold keys per device and "
+            "carry no state)"
+        )
     if program.kind == "bn":
         if evidence is not None:
             raise ValueError(
@@ -361,6 +798,16 @@ def run_program_sharded(
         if backend == "schedule":
             _check_comm_mechanisms(program, "psum_broadcast")
             groups = program.schedule_executable().round_groups
+        if fused:
+            return bn_fused_sharded(
+                program.cbn, key, mesh,
+                n_chains=n_chains, n_iters=n_iters,
+                burn_in=50 if burn_in is None else burn_in,
+                sampler=sampler, thin=thin, placement=program.placement,
+                groups=groups, carry=carry, return_state=return_state,
+                diag_total=diag_total, diag_batch=diag_batch,
+                profile_sig=profile_sig, **axes,
+            )
         return bn_gibbs_sharded(
             program.cbn, key, mesh,
             n_chains=n_chains, n_iters=n_iters,
@@ -378,6 +825,24 @@ def run_program_sharded(
     if backend == "schedule":
         _check_comm_mechanisms(program, "ppermute_halo")
         parities = program.schedule_executable().parities
+    if fused:
+        if sampler != "lut_ky":
+            raise ValueError(
+                f"fused sharded MRF rounds implement the lut_ky datapath "
+                f"only, got sampler={sampler!r}"
+            )
+        if program.ir.evidence:
+            raise ValueError(
+                "baked MRF pins have no sharded-fused lowering (the "
+                "executor route excludes pinned buckets)"
+            )
+        return mrf_fused_sharded(
+            program.mrf, evidence, key, mesh,
+            n_chains=n_chains, n_iters=n_iters, parities=parities,
+            carry=carry, return_state=return_state,
+            diag_total=diag_total, diag_batch=diag_batch,
+            profile_sig=profile_sig, **axes,
+        )
     return mrf_gibbs_sharded(
         program.mrf, evidence, key, mesh,
         n_chains=n_chains, n_iters=n_iters, sampler=sampler,

@@ -311,3 +311,78 @@ def fused_gibbs_sweep(
         interpret=interpret,
     )(vals, fr.nodes, fr.cards, fr.base, fr.stride, fr.scope_var,
       fr.is_self, words, logf, tab)
+
+
+def fused_color_round(
+    vals: jax.Array,  # (B, n) chain values
+    nodes: jax.Array,  # (C,) local node ids; id >= n marks a pad slot
+    cards: jax.Array,  # (C,) cards; 0 = pad
+    base: jax.Array,  # (C, F)
+    stride: jax.Array,  # (C, F, S)
+    scope_var: jax.Array,
+    is_self: jax.Array,
+    words: jax.Array,  # (B, C, n_words) uint32
+    logf: jax.Array,  # (1, L) log-CPT arena
+    tab: jax.Array,  # (1, T) exp-weight LUT
+    *,
+    sampler: str,
+    exp_spec,
+    v_max: int,
+    n_words: int,
+    weight_bits: int,
+    precision: int,
+    total_steps: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """One fused color round as a standalone grid=(1,) `pallas_call`.
+
+    The sharded engine (`core/distributed.py`) cannot place `lax`
+    collectives inside a kernel, so its one-shard_map-body route runs one
+    `bn_round_step` per schedule round with the `psum_broadcast` merge in
+    between.  Reusing the exact sweep kernel (its r==0 branch seeds the
+    resident value block from `vals`) keeps the per-round datapath — and
+    therefore every draw — bit-identical to `fused_gibbs_sweep`'s grid
+    steps; only how halo state moves differs."""
+    check_fused_sampler(sampler)
+    b, n = vals.shape
+    c_max, f_max, s_max = stride.shape
+    kernel = functools.partial(
+        bn_round_step, n_chains=b, n_nodes=n, c_max=c_max, f_max=f_max,
+        s_max=s_max, v_max=v_max, n_words=n_words, sampler=sampler,
+        x0=exp_spec.x0, dx=exp_spec.dx, lut_size=exp_spec.size,
+        weight_bits=weight_bits, precision=precision,
+        total_steps=total_steps,
+    )
+    vmem = compat.pallas_vmem()
+
+    def resident(rows, cols):
+        return pl.BlockSpec((rows, cols), lambda i: (0, 0),
+                            memory_space=vmem)
+
+    cfs = c_max * f_max * s_max
+    return pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[
+            resident(b, n),
+            resident(1, c_max),  # nodes
+            resident(1, c_max),  # cards
+            resident(1, c_max * f_max),  # base
+            resident(1, cfs),  # stride
+            resident(1, cfs),  # scope_var
+            resident(1, cfs),  # is_self
+            resident(b, c_max * n_words),  # random words
+            resident(1, logf.shape[1]),  # log-CPT arena
+            resident(1, tab.shape[1]),  # exp-weight LUT
+        ],
+        out_specs=resident(b, n),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.int32),
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+    )(vals, nodes.reshape(1, -1).astype(jnp.int32),
+      cards.reshape(1, -1).astype(jnp.int32), base.reshape(1, -1),
+      stride.reshape(1, -1), scope_var.reshape(1, -1),
+      is_self.reshape(1, -1).astype(jnp.int32),
+      words.reshape(b, c_max * n_words), logf, tab)

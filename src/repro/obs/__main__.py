@@ -54,7 +54,7 @@ def check_profile(rec: dict, path: str) -> int:
         print(profile_table(rows, joined.get("comm", [])))
     print(f"\n[obs] {len(rec.get('buckets', []))} captured executables, "
           f"{joined.get('n_dispatches', 0)} dispatches "
-          f"({joined.get('n_sharded_skipped', 0)} sharded), "
+          f"({joined.get('n_sharded', 0)} sharded), "
           f"{len(joined.get('unattributed', []))} unattributed")
     for p in problems:
         print(f"[obs] ERROR: {p}")

@@ -54,22 +54,29 @@ HLO_OP_MECHANISM = {
 BOTTLENECKS = ("compute", "memory", "collective")
 
 
-def bucket_signature(key, n_padded: int) -> str:
+def bucket_signature(key, n_padded: int, route: str = "vmap",
+                     shard_width: int = 1) -> str:
     """Deterministic signature of a batcher bucket executable.
 
     One signature per distinct jit specialization: every field that is a
     static argument (or shapes one, like the pad width and clamp set)
-    participates.  Pure string math — safe to stamp on every dispatch
-    span whether or not profiling is enabled.
+    participates.  A sharded-route dispatch executes a different
+    specialization (the shard_map body over a mesh slice), so the route
+    and slice width extend the signature there; the vmap format is
+    unchanged.  Pure string math — safe to stamp on every dispatch span
+    whether or not profiling is enabled.
     """
     clamp = ",".join(str(n) for n in key.clamp_nodes)
-    return "|".join([
+    parts = [
         "bucket", key.program_key[:16], key.kind, key.backend, key.sampler,
         f"pad{n_padded}", f"ch{key.n_chains}", f"it{key.n_iters}",
         f"bi{key.burn_in}", f"th{key.thin}", f"cl[{clamp}]",
         f"pins{int(key.has_pins)}", f"fused{int(key.fused)}",
         f"res{int(key.resumed)}", f"diag{int(key.diagnostics)}",
-    ])
+    ]
+    if route != "vmap":
+        parts += [route, f"sh{shard_width}"]
+    return "|".join(parts)
 
 
 def program_signature(program, *, n_chains, n_iters, burn_in, thin,
@@ -300,8 +307,10 @@ def join_dispatches(profiles, events) -> dict:
     wall fields kept, or ``export.load_jsonl`` output).  Returns rows
     aggregated per signature with achieved-vs-peak ratios, per-mechanism
     comm rows, and the dispatches no profile covered.  Sharded-route
-    dispatches execute outside the batcher's jitted bucket entries, so
-    they are counted separately rather than flagged unattributed.
+    dispatches attribute like any other: the executor stamps their
+    route-qualified ``profile_sig`` and the sharded engines capture the
+    shard_map executable under the same signature, so a sharded dispatch
+    without a profile is an unattributed finding, not a skip.
     """
     rows: dict = {}
     unattributed: dict = {}
@@ -315,7 +324,6 @@ def join_dispatches(profiles, events) -> dict:
         n_dispatches += 1
         if a.get("route") != "vmap":
             n_sharded += 1
-            continue
         sig = a.get("profile_sig")
         prof = profiles.get(sig)
         if prof is None:
@@ -384,7 +392,7 @@ def join_dispatches(profiles, events) -> dict:
         "comm": comm_rows,
         "unattributed": [unattributed[k] for k in sorted(unattributed)],
         "n_dispatches": n_dispatches,
-        "n_sharded_skipped": n_sharded,
+        "n_sharded": n_sharded,
     }
 
 

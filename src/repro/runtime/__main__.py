@@ -53,6 +53,10 @@ def main(argv=None) -> int:
     ap.add_argument("--shard-min-sites", type=int, default=None,
                     help="route MRF grids with >= this many sites to "
                          "run_sharded (default: sharded route off)")
+    ap.add_argument("--no-pins", action="store_true",
+                    help="strip pin evidence from grid queries (pinned "
+                         "grids are ineligible for the sharded route, so "
+                         "the sharded smoke jobs replay pin-free)")
     ap.add_argument("--slice-iters", type=int, default=None,
                     help="serve long queries in slices of this many sweeps "
                          "(continuous batching; default: whole-query)")
@@ -91,6 +95,10 @@ def main(argv=None) -> int:
     models, queries = TRACES[args.trace](
         args.queries, quick=args.quick, seed=args.seed
     )
+    if args.no_pins:
+        for q in queries:
+            if q.image is not None:
+                q.evidence = None
     # quick mode pads every microbatch to one size: each distinct batch
     # shape is a fresh XLA compile, and the CI smoke job wants the serving
     # path exercised, not the jit cache stress-tested
@@ -153,7 +161,7 @@ def main(argv=None) -> int:
         print(f"[runtime] profile: {args.profile_out} "
               f"({len(rec['buckets'])} executables, "
               f"{joined['n_dispatches']} dispatches, "
-              f"{joined['n_sharded_skipped']} sharded) "
+              f"{joined['n_sharded']} sharded) "
               f"+ {pbase}.series.jsonl")
         print(profile_table(joined["rows"], joined["comm"]))
         profile_mod.disable()

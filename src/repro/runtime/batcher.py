@@ -38,7 +38,7 @@ PAD_SIZES = (1, 2, 4, 8, 16, 32)
 
 def fused_eligible(
     kind: str, sampler: str, backend: str,
-    graph=None, n_chains: int | None = None,
+    graph=None, n_chains: int | None = None, shard_width: int = 1,
 ) -> bool:
     """Whether a bucket's static signature can route onto the fused Pallas
     executables: schedule backend + a sampler the kernels implement (BN:
@@ -52,8 +52,16 @@ def fused_eligible(
     budget (`analysis.kernel_lint.fused_fits`): an oversized bucket —
     wide replica × deep chain width — is demoted to the unfused route
     here, on estimate, instead of OOMing on device at dispatch.  The
-    verdict is memoized per (ir_key, n_chains, sampler, budget), so the
-    steady-state per-query cost is a dict hit."""
+    verdict is memoized per (ir_key, n_chains, sampler, width, budget),
+    so the steady-state per-query cost is a dict hit.
+
+    `shard_width > 1` (a bucket the engine will route sharded) budgets
+    the *per-shard* envelope — each device holds its local row slab plus
+    two halo rows (MRF) or its owned node slice (BN), not the whole
+    model — which is the estimate the shard_map body actually allocates
+    under.  (The too-few-devices fallback then runs the full-envelope
+    vmap executable; the estimator is upper-ish enough that this only
+    matters for models near the budget edge.)"""
     if backend != "schedule":
         return False
     if kind == "bn":
@@ -62,7 +70,9 @@ def fused_eligible(
     elif sampler != "lut_ky":
         return False
     if graph is not None and n_chains is not None:
-        return kernel_lint.fused_fits(graph, n_chains, sampler)
+        return kernel_lint.fused_fits(
+            graph, n_chains, sampler, shard_width=shard_width
+        )
     return True
 
 
@@ -148,7 +158,7 @@ class BucketKey:
 
 def bucket_key(
     query: Query, graph, backend: str, slice_iters: int | None = None,
-    fused: bool = False, diagnostics: bool = False,
+    fused: bool = False, diagnostics: bool = False, shard_width: int = 1,
 ) -> BucketKey:
     """The bucket a query lands in, derived without compiling anything
     (`graph` is the model's structure-only IR from engine registration).
@@ -165,7 +175,10 @@ def bucket_key(
     `fused=True` (the engine config knob) routes *eligible* buckets onto
     the fused Pallas executables (`fused_eligible`); ineligible buckets
     keep the unfused route — never a silent answer change, since fused and
-    unfused are bit-exact for every eligible signature."""
+    unfused are bit-exact for every eligible signature.  `shard_width`
+    (the engine supplies the slice width when the bucket will route
+    sharded) makes the VMEM eligibility check budget the per-shard
+    envelope instead of the whole model."""
     if graph.kind == "bn":
         clamp = tuple(sorted(int(k) for k in (query.evidence or {})))
         has_pins = False
@@ -191,7 +204,7 @@ def bucket_key(
         resumed=query.carry is not None,
         fused=fused and fused_eligible(
             graph.kind, query.sampler, backend,
-            graph=graph, n_chains=query.n_chains,
+            graph=graph, n_chains=query.n_chains, shard_width=shard_width,
         ),
         diagnostics=diagnostics,
     )
@@ -458,6 +471,9 @@ def _execute_bucket(
             masks.append(m)
             vals.append(v)
         pmask_q, pvals_q = jnp.stack(masks), jnp.stack(vals)
+    if key.fused:
+        # same first-use guarantee the single-program path gets
+        program.ensure_fused_cross_check(key.sampler)
     if key.backend == "schedule":
         ex = program.schedule_executable()
         parities, eager = ex.parities, False

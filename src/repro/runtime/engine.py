@@ -66,7 +66,9 @@ class EngineConfig:
     # bucket: each served query's QueryResult.quality carries its R-hat/ESS
     # brief, the metrics grow rhat_max/ess_min columns, and the tracer
     # emits per-query `quality` instants.  Draw streams are bit-identical
-    # either way (the sharded route demotes it — no carry support there)
+    # either way, on every route — fused sharded dispatches thread the
+    # accumulator through the shard_map body (its site/chain moment leaves
+    # shard with the state)
     diagnostics: bool = False
     pipeline: str = "runtime"  # pass list incl. merge_small_colors
     mesh_shape: tuple[int, int] = (4, 4)
@@ -175,11 +177,30 @@ class Engine:
             pipeline=self.config.pipeline,
         )
 
+    def _shard_width_of(self, q: Query) -> int:
+        """The mesh-slice width this query's bucket would shard over, from
+        config + model statics alone (the same gate `executor.route`
+        applies): fused eligibility budgets VMEM per shard — local row
+        slab + halo rows — when the bucket will run the shard_map body."""
+        cfg = self.config
+        graph = self.graphs[q.model]
+        if (
+            cfg.shard_min_sites is not None
+            and graph.kind == "mrf"
+            and not q.evidence
+        ):
+            mrf = graph.source
+            if (mrf.height * mrf.width >= cfg.shard_min_sites
+                    and mrf.height % cfg.shard_width == 0):
+                return cfg.shard_width
+        return 1
+
     def _bucket_key(self, q: Query) -> BucketKey:
         return batcher_mod.bucket_key(
             q, self.graphs[q.model], self.config.backend,
             self.config.slice_iters, fused=self.config.fused,
             diagnostics=self.config.diagnostics,
+            shard_width=self._shard_width_of(q),
         )
 
     def _make_calibrator(self) -> Calibrator:
@@ -230,11 +251,10 @@ class Engine:
             program = self._program(qlist[0].model)
             rep = qlist[: cfg.max_batch]
             route = executor.batch_route(program, key, rep)
-            # warmup must measure under the key serving will dispatch with
-            # (the sharded route demotes the fused label)
-            items.append(
-                (program, executor.effective_key(key, route), rep, route)
-            )
+            # the bucket key IS the execution key on every route (the fused
+            # sharded datapath is first-class, nothing gets demoted), so
+            # warmup measures exactly what serving will dispatch
+            items.append((program, key, rep, route))
         self.calibrator.warmup(dispatch, items, repeats=repeats)
         return self.calibrator
 

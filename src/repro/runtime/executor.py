@@ -20,7 +20,12 @@ engine hands every flushed bucket to a `WorkerPool` of W simulated workers:
     route really executes through `CompiledProgram.run_sharded`; otherwise
     the math falls back to the vmap executable while the *clock* still
     models the slice — route choice is config-deterministic, never
-    machine-probed at dispatch time.
+    machine-probed at dispatch time.  A **fused** sharded bucket inherits
+    the whole Pallas datapath: one shard_map body runs the fused color-
+    round kernels with the named collectives between them, bit-exact with
+    the vmap fused executable, so slicing (chain-state carry) and the
+    diagnostics accumulator ride the sharded route first-class — no label
+    demotion, the `BucketKey` a dispatch executes under is the bucket's.
 
 Service times come from the engine's `Calibrator` (measured when warm, the
 line model cold); the wall time of every real dispatch is recorded next to
@@ -156,7 +161,10 @@ class Executor:
             cfg.shard_min_sites is not None
             and key.kind == "mrf"
             and not key.has_pins
-            and not key.resumed
+            # a resumed bucket stays sharded only when fused — the fused
+            # shard_map body carries chain state bit-exactly; the legacy
+            # sharded engines fold keys per device and carry nothing
+            and (key.fused or not key.resumed)
             and program.mrf.height * program.mrf.width >= cfg.shard_min_sites
             and program.mrf.height % cfg.shard_width == 0
         ):
@@ -178,25 +186,16 @@ class Executor:
 
     def batch_route(self, program, key: BucketKey, qs: list[Query]) -> str:
         """The route this specific batch takes: the bucket's static route,
-        demoted to vmap when any query continues past this slice — the
-        sharded path cannot return chain state (run_sharded has no carry
-        support yet, see ROADMAP) and a continuation must never silently
-        restart."""
+        demoted to vmap when any query continues past this slice on a
+        *non-fused* sharded bucket — the legacy sharded engines cannot
+        return chain state and a continuation must never silently restart.
+        Fused sharded buckets carry state bit-exactly, so they keep the
+        route through every slice."""
         route = self.route(program, key)
-        if route == "sharded" and any(q.n_iters > key.n_iters for q in qs):
+        if (route == "sharded" and not key.fused
+                and any(q.n_iters > key.n_iters for q in qs)):
             route = "vmap"
         return route
-
-    def effective_key(self, key: BucketKey, route: str) -> BucketKey:
-        """The key this dispatch *actually* executes under.  The sharded
-        route goes through `run_sharded`, which has no fused path and no
-        chain-state carry — demote the fused and diagnostics labels so
-        metrics and calibration signatures never claim an execution mode
-        that did not happen (and the too-few-devices vmap fallback stays
-        consistent with the sharded leg)."""
-        if route == "sharded" and (key.fused or key.diagnostics):
-            return dataclasses.replace(key, fused=False, diagnostics=False)
-        return key
 
     def execute(
         self,
@@ -210,7 +209,7 @@ class Executor:
         and `Engine.calibrate`'s timed warmup re-runs, so warmup measures
         exactly what serving will pay — sharded route included."""
         if route == "sharded" and self._shard_mesh() is not None:
-            return self._run_sharded(program, key, qs)
+            return self._run_sharded(program, key, qs, return_state)
         return batcher_mod.execute_bucket(
             program, key, qs, self.pad_sizes, return_state=return_state
         )
@@ -230,7 +229,6 @@ class Executor:
         clocks and the calibrated service prediction."""
         cfg = self.config
         route = self.batch_route(program, key, qs)
-        key = self.effective_key(key, route)
         width = cfg.shard_width if route == "sharded" else 1
         lower0 = program.clamp_lowerings
         # measured_s feeds the calibrator; it is real time by design
@@ -312,8 +310,10 @@ class Executor:
             resumed=key.resumed, program=program.program_key,
             service_s=service_s, service_src=service_src,
             # joins the span against obs.profile's cached static costs;
-            # pure string math, stamped whether or not profiling is on
-            profile_sig=profile_mod.bucket_signature(key, n_padded),
+            # pure string math, stamped whether or not profiling is on.
+            # Sharded dispatches stamp the route-qualified signature the
+            # shard_map capture registers under, so they attribute too.
+            profile_sig=self._profile_sig(key, n_padded, route),
         )
         tracer.sim_span(
             "dispatch", start, finish, cat="runtime",
@@ -327,27 +327,84 @@ class Executor:
                 lead_worker=workers[0],
             )
 
+    def _profile_sig(self, key: BucketKey, n_padded: int, route: str) -> str:
+        width = self.config.shard_width if route == "sharded" else 1
+        return profile_mod.bucket_signature(
+            key, n_padded, route=route, shard_width=width
+        )
+
     def _run_sharded(
-        self, program, key: BucketKey, qs: list[Query]
+        self, program, key: BucketKey, qs: list[Query],
+        return_state: bool = False,
     ) -> list[QueryResult]:
         """The real sharded route: each query's grid rows split over the
-        mesh slice via `run_sharded` (pins and resumes never route here;
-        draws use the distributed engines' per-device key folding, so bits
-        legitimately differ from the vmap route — the route is part of the
-        engine config, not a hidden fallback)."""
+        mesh slice via the `core/distributed.py` engines (pins never route
+        here).
+
+        Fused buckets run the one-shard_map-body fused engine — the same
+        Pallas datapath as the vmap route, bit-exact with it (asserted at
+        first sharded-fused use), so chain-state carries and the quality
+        accumulator cross the route boundary freely.  Non-fused buckets
+        keep the legacy engines, whose per-device key folding legitimately
+        draws different bits — the route is part of the engine config, not
+        a hidden fallback."""
         mesh = self._shard_mesh()
+        if not key.fused:
+            out = []
+            for q in qs:
+                labels = program.run_sharded(
+                    jax.random.key(q.seed), mesh,
+                    n_chains=key.n_chains, n_iters=key.n_iters,
+                    sampler=key.sampler,
+                    evidence=jnp.asarray(np.asarray(q.image, np.int32)),
+                    backend=key.backend,
+                )
+                out.append(QueryResult(
+                    qid=q.qid, model=q.model, kind="mrf", marginals=None,
+                    final_state=np.asarray(labels), arrival_s=q.arrival_s,
+                    batch_size=len(qs),
+                ))
+            return out
+        from repro.core import distributed as dist_mod
+        from repro.diag import accum as diag_accum
+
+        program.ensure_fused_cross_check(key.sampler, sharded=True)
+        run_state = return_state or key.diagnostics
+        profile_sig = None
+        if profile_mod.enabled():
+            n_padded = batcher_mod.pad_size(len(qs), self.pad_sizes)
+            profile_sig = self._profile_sig(key, n_padded, "sharded")
         out = []
         for q in qs:
-            labels = program.run_sharded(
-                jax.random.key(q.seed), mesh,
+            diag_total = None
+            if key.diagnostics and not key.resumed:
+                # the accumulator splits at the query's *total* budget even
+                # when this dispatch runs one slice of it (mirrors the vmap
+                # bucket executables' totals_q lanes)
+                diag_total = jnp.asarray(q.n_iters, jnp.int32)
+            res = dist_mod.run_program_sharded(
+                program,
+                None if key.resumed else jax.random.key(q.seed), mesh,
                 n_chains=key.n_chains, n_iters=key.n_iters,
                 sampler=key.sampler,
                 evidence=jnp.asarray(np.asarray(q.image, np.int32)),
-                backend=key.backend,
+                backend=key.backend, fused=True,
+                carry=q.carry, return_state=run_state,
+                diag_total=diag_total, profile_sig=profile_sig,
             )
+            state = None
+            if run_state:
+                labels, state = res
+            else:
+                labels = res
+            quality = None
+            if key.diagnostics:
+                quality = diag_accum.summarize(state.quality).brief()
             out.append(QueryResult(
                 qid=q.qid, model=q.model, kind="mrf", marginals=None,
                 final_state=np.asarray(labels), arrival_s=q.arrival_s,
                 batch_size=len(qs),
+                carry=state if return_state else None,
+                quality=quality,
             ))
         return out

@@ -371,6 +371,45 @@ def test_batcher_demotes_oversized_fused_bucket():
     assert batcher.bucket_key(narrow, g, "schedule", fused=True).fused is True
 
 
+def test_sharded_footprints_budget_the_per_shard_envelope():
+    """Satellite: `shard_width > 1` budgets what each device of the
+    shard_map body actually allocates — the local row slab plus halo rows
+    on the grid, the owned node slice on the BN — not the whole model."""
+    mrf = compile_ir.from_mrf(GridMRF(64, 64, 4))
+    whole = kernel_lint.mrf_fused_footprint(mrf, 8)
+    sh = kernel_lint.mrf_fused_footprint(mrf, 8, shard_width=4)
+    assert sh.shard_width == 4
+    assert "halo_rows" in sh.breakdown and "halo_rows" not in whole.breakdown
+    # the 16-row local slab (64 rows / 4 shards) undercuts the 32-row
+    # block_h tile even after paying the two halo rows
+    assert sh.total_bytes < whole.total_bytes
+    over = sh.findings(budget=1)
+    assert over and "@sh4" in over[0].loc  # findings name the slice width
+    pigs = _bn_ir("pigs")
+    bn_whole = kernel_lint.bn_fused_footprint(pigs, 32)
+    bn_sh = kernel_lint.bn_fused_footprint(pigs, 32, shard_width=4)
+    assert bn_sh.total_bytes < bn_whole.total_bytes
+    # the pigs-class demotion story inverts on a slice: the whole envelope
+    # busts the budget, the per-device owned node slice fits
+    assert bn_whole.total_bytes > kernel_lint.vmem_budget()
+    assert bn_sh.total_bytes <= kernel_lint.vmem_budget()
+
+
+def test_fused_fits_judges_sharded_buckets_per_shard():
+    """The demotion oracle keys on the slice width: a bucket too wide for
+    one core's VMEM stays fused when it will run the shard_map body."""
+    from repro.runtime import batcher
+
+    g = _bn_ir("pigs")
+    assert not kernel_lint.fused_fits(g, 32)
+    assert kernel_lint.fused_fits(g, 32, shard_width=4)
+    wide = batcher.Query(qid=0, model="pigs", n_chains=32)
+    assert batcher.bucket_key(wide, g, "schedule", fused=True).fused is False
+    assert batcher.bucket_key(
+        wide, g, "schedule", fused=True, shard_width=4
+    ).fused is True
+
+
 # ---------------------------------------------------------------------------
 # repo-convention source lint
 # ---------------------------------------------------------------------------

@@ -431,3 +431,82 @@ def test_quality_table_renders_rows():
         "ky_tv": 1.0e-2, "wall_s": 35.0,
     }])
     assert "| survey | fused |" in txt and "| n/a |" in txt
+
+
+# ---------------------------------------------------------------------------
+# sharded-route quality bit-identity (advisory multi-device CI job)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_sharded_quality_snapshot_bit_identical_8dev():
+    """Satellite gate: the fused sharded engines thread the *same* quality
+    accumulator through the shard_map body, so a sharded run's
+    QualitySnapshot equals the single-device run's field for field — no
+    demotion, no "diagnostics ran unsharded" asterisk (subprocess with 8
+    simulated host devices, mirroring test_distributed_pm)."""
+    import subprocess
+    import textwrap
+    from pathlib import Path
+
+    script = textwrap.dedent(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.compile import compile_graph
+        from repro.compile import ir as compile_ir
+        from repro.core import compat
+        from repro.core.graphs import GridMRF, random_bayesnet
+
+        mesh = compat.make_mesh((2, 4), ("data", "model"))
+
+        def assert_snap_equal(a, b):
+            da, db = a.to_dict(), b.to_dict()
+            assert da.keys() == db.keys()
+            for k in da:
+                x, y = da[k], db[k]
+                if isinstance(x, str) or isinstance(y, str):
+                    assert x == y, k
+                elif x is None or y is None:
+                    assert x is y, k
+                else:
+                    xa, ya = np.asarray(x), np.asarray(y)
+                    if np.issubdtype(xa.dtype, np.floating):
+                        assert np.array_equal(xa, ya, equal_nan=True), k
+                    else:
+                        assert x == y, k
+
+        mrf = GridMRF(8, 16, 4, theta=1.1)
+        prog = compile_graph(compile_ir.from_mrf(mrf))
+        ev = jnp.zeros((8, 16), jnp.int32)
+        lab1, snap1 = prog.run(jax.random.key(7), evidence=ev, n_chains=4,
+                               n_iters=5, fused=True, diagnostics=True)
+        lab2, snap2 = prog.run_sharded(jax.random.key(7), mesh, evidence=ev,
+                                       n_chains=4, n_iters=5, fused=True,
+                                       diagnostics=True)
+        assert (np.asarray(lab1) == np.asarray(lab2)).all()
+        assert_snap_equal(snap1, snap2)
+
+        bn = random_bayesnet(12, seed=3)
+        pbn = compile_graph(compile_ir.from_bayesnet(bn))
+        kw = dict(n_chains=4, n_iters=6, burn_in=2, thin=2, fused=True,
+                  diagnostics=True)
+        m1, v1, sn1 = pbn.run(jax.random.key(11), **kw)
+        m2, v2, sn2 = pbn.run_sharded(jax.random.key(11), mesh, **kw)
+        assert (np.asarray(v1) == np.asarray(v2)).all()
+        assert (np.asarray(m1) == np.asarray(m2)).all()
+        assert_snap_equal(sn1, sn2)
+        print("SHARDED_QUALITY_OK")
+        """
+    )
+    root = Path(__file__).resolve().parent.parent
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(root / "src")
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run(
+        [sys.executable, "-c", script], env=env, capture_output=True,
+        text=True, timeout=900,
+    )
+    assert res.returncode == 0, res.stderr[-3000:]
+    assert "SHARDED_QUALITY_OK" in res.stdout

@@ -68,3 +68,75 @@ def test_distributed_pm_8dev():
     )
     assert res.returncode == 0, res.stderr[-3000:]
     assert "DISTRIBUTED_PM_OK" in res.stdout
+
+
+_BOUNDARY_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np, jax, jax.numpy as jnp
+
+    from repro.compile import compile_graph
+    from repro.compile import ir as compile_ir
+    from repro.core import compat
+    from repro.core.graphs import GridMRF, random_bayesnet
+
+    mesh = compat.make_mesh((2, 4), ("data", "model"))
+
+    # MRF (lut_ky, the fused grid sampler): a query sliced across the
+    # shard-route boundary — sharded first leg, vmap second — equals the
+    # unsliced sharded run bit for bit, because both legs execute the one
+    # fused Pallas datapath and the carry is the whole chain state
+    mrf = GridMRF(8, 16, 4, theta=1.1)
+    prog = compile_graph(compile_ir.from_mrf(mrf))
+    ev = jnp.zeros((8, 16), jnp.int32)
+    key = jax.random.key(7)
+    full = prog.run_sharded(key, mesh, evidence=ev, n_chains=4, n_iters=5,
+                            fused=True)
+    _, st = prog.run_sharded(key, mesh, evidence=ev, n_chains=4, n_iters=2,
+                             fused=True, return_state=True)
+    resumed = prog.run(None, evidence=ev, n_chains=4, n_iters=3, fused=True,
+                       carry_state=st)
+    assert (np.asarray(full) == np.asarray(resumed)).all()
+    # and the reverse crossing: vmap first leg, sharded second
+    _, st2 = prog.run(key, evidence=ev, n_chains=4, n_iters=2, fused=True,
+                      return_state=True)
+    resumed2 = prog.run_sharded(None, mesh, evidence=ev, n_chains=4,
+                                n_iters=3, fused=True, carry_state=st2)
+    assert (np.asarray(full) == np.asarray(resumed2)).all()
+    print("MRF_BOUNDARY_OK")
+
+    # BN: both fused samplers cross the boundary bit-exactly, marginals
+    # (burn-in and thinning mid-stride) included
+    bn = random_bayesnet(12, seed=3)
+    pbn = compile_graph(compile_ir.from_bayesnet(bn))
+    for sampler in ("lut_ky", "exact_ky"):
+        base = dict(n_chains=4, burn_in=2, thin=2, sampler=sampler,
+                    fused=True)
+        kb = jax.random.key(11)
+        m_full, v_full = pbn.run_sharded(kb, mesh, n_iters=6, **base)
+        _, _, st = pbn.run_sharded(kb, mesh, n_iters=3, return_state=True,
+                                   **base)
+        m2, v2 = pbn.run(None, n_iters=3, carry_state=st, **base)
+        assert (np.asarray(v_full) == np.asarray(v2)).all()
+        assert (np.asarray(m_full) == np.asarray(m2)).all()
+        print(f"BN_BOUNDARY_{sampler}_OK")
+    print("SHARD_BOUNDARY_OK")
+    """
+)
+
+
+@pytest.mark.slow
+def test_fused_shard_route_boundary_8dev():
+    """Satellite gate: chain state carried across the sharded/vmap route
+    boundary reproduces the unsliced sharded run's bits, for every fused
+    sampler (grid lut_ky; BN lut_ky and exact_ky)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run(
+        [sys.executable, "-c", _BOUNDARY_SCRIPT], env=env,
+        capture_output=True, text=True, timeout=900,
+    )
+    assert res.returncode == 0, res.stderr[-3000:]
+    assert "SHARD_BOUNDARY_OK" in res.stdout

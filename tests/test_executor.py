@@ -633,3 +633,96 @@ def test_engine_sharded_route_8dev():
     )
     assert res.returncode == 0, res.stderr[-3000:]
     assert "SHARDED_SERVING_OK" in res.stdout
+
+
+@pytest.mark.slow
+def test_engine_batched_sliced_sharded_fused_8dev():
+    """The tentpole acceptance: one bucket simultaneously batched, sliced,
+    sharded, AND fused — every dispatch (continuations included) runs the
+    one-shard_map-body fused datapath, the quality accumulator rides the
+    carry, the shard_map executable attributes in the profile join, and
+    the results are bit-exact with a single-device vmap engine."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+    from pathlib import Path
+
+    script = textwrap.dedent(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import numpy as np
+        from repro import obs
+        from repro.compile import clear_program_cache
+        from repro.core import mrf as mrf_mod
+        from repro.core.graphs import GridMRF
+        from repro.obs import export
+        from repro.obs import profile as profile_mod
+        from repro.runtime import Engine, EngineConfig, Query
+
+        mrf = GridMRF(8, 8, 3, theta=1.1, h=1.5)
+        imgs = [np.asarray(
+                    mrf_mod.make_denoising_problem(8, 8, 3, 0.25, seed=s)[1])
+                for s in range(3)]
+
+        def queries():
+            return [Query(qid=i, model="g", image=imgs[i % 3], n_chains=2,
+                          n_iters=8, seed=i, arrival_s=1e-5 * i)
+                    for i in range(6)]
+
+        tr = obs.enable()
+        reg = profile_mod.enable()
+        eng = Engine({"g": mrf}, EngineConfig(
+            pad_sizes=(4,), max_batch=4, n_workers=8, shard_width=4,
+            shard_min_sites=64, fused=True, diagnostics=True, slice_iters=3,
+        ))
+        eng.submit(queries())
+        res = eng.run()
+        recs = eng.metrics.batch_records
+        assert len(res) == 6
+        # 8 sweeps in slices of 3: every query resumed twice, and every
+        # dispatch — fresh or resumed — kept the fused sharded route
+        assert len(recs) > 2
+        assert all(r.route == "sharded" and r.n_workers == 4 for r in recs)
+        assert all(res[q].quality is not None for q in res)
+
+        # the shard_map executable was captured under the dispatch
+        # signature: zero unattributed, collective bytes on a sharded row
+        events = export.events_as_dicts(list(tr.events))
+        joined = profile_mod.join_dispatches(reg.profiles, events)
+        assert joined["unattributed"] == [], joined["unattributed"]
+        assert joined["n_sharded"] == len(recs)
+        assert any(p.meta.get("route") == "sharded"
+                   and p.collective_bytes > 0
+                   for p in reg.profiles.values())
+
+        # bit-exact with the single-device vmap engine, unsliced
+        obs.disable()
+        profile_mod.disable()
+        clear_program_cache()
+        ref = Engine({"g": mrf}, EngineConfig(pad_sizes=(4,), max_batch=4,
+                                              fused=True, diagnostics=True))
+        ref.submit(queries())
+        whole = ref.run()
+        for qid in res:
+            np.testing.assert_array_equal(res[qid].final_state,
+                                          whole[qid].final_state)
+            qa, qb = res[qid].quality, whole[qid].quality
+            assert qa.keys() == qb.keys()
+            for k in qa:
+                x, y = qa[k], qb[k]
+                assert x == y or (x != x and y != y), (k, x, y)
+        print("SHARDED_FUSED_ENGINE_OK")
+        """
+    )
+    root = Path(__file__).resolve().parent.parent
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(root / "src")
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run(
+        [sys.executable, "-c", script], env=env, capture_output=True,
+        text=True, timeout=900,
+    )
+    assert res.returncode == 0, res.stderr[-3000:]
+    assert "SHARDED_FUSED_ENGINE_OK" in res.stdout

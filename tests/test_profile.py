@@ -167,6 +167,23 @@ def test_bucket_signature_stable_and_distinct():
     assert profile_mod.bucket_signature(_key(), 16) not in seen  # pad width
 
 
+def test_bucket_signature_sharded_route_qualified():
+    """A sharded dispatch runs a different jit specialization (the
+    shard_map body over a mesh slice), so the route and slice width extend
+    the signature; the vmap format is untouched by the new arguments."""
+    base = profile_mod.bucket_signature(_key(), 8)
+    assert profile_mod.bucket_signature(
+        _key(), 8, route="vmap", shard_width=1
+    ) == base
+    sh4 = profile_mod.bucket_signature(
+        _key(), 8, route="sharded", shard_width=4
+    )
+    assert sh4 != base and sh4.endswith("|sharded|sh4")
+    assert profile_mod.bucket_signature(
+        _key(), 8, route="sharded", shard_width=2
+    ) != sh4
+
+
 # ---------------------------------------------------------------------------
 # capture + join
 # ---------------------------------------------------------------------------
@@ -224,6 +241,40 @@ def test_validate_profile_flags_holes():
     assert any("bottleneck" in p or "nonsense" in p for p in problems)
     assert profile_mod.validate_profile({"schema": 1, "buckets": [],
                                          "joined": {}}) != []
+
+
+def test_join_attributes_sharded_dispatches():
+    """Sharded-route dispatches join like any other bucket: a profile
+    captured under the route-qualified signature attributes them (comm
+    rows included), and a missing profile is an unattributed finding —
+    never a silent skip (the old ``n_sharded_skipped`` behavior)."""
+    sig = profile_mod.bucket_signature(
+        _key(fused=True), 8, route="sharded", shard_width=4
+    )
+    prof = {
+        "sig": sig, "flops": 2.0e6, "hbm_bytes": 1.0e6,
+        "collective_bytes": 4096.0, "roofline_s": 1e-4,
+        "collective_by_op": {"collective-permute": 4096.0},
+        "bottleneck": "collective",
+    }
+    mk = lambda s: {
+        "name": "dispatch",
+        "args": {"route": "sharded", "profile_sig": s, "model": "g",
+                 "service_s": 2e-3},
+        "wargs": {"measured_s": 1e-3},
+    }
+    joined = profile_mod.join_dispatches(
+        {sig: prof}, [mk(sig), mk(sig), mk("bucket|nope|sharded|sh4")]
+    )
+    assert joined["n_dispatches"] == 3 and joined["n_sharded"] == 3
+    (row,) = joined["rows"]
+    assert row["sig"] == sig and row["n_dispatches"] == 2
+    assert row["peak_frac"] == pytest.approx(0.1)
+    (comm,) = joined["comm"]
+    assert comm["mechanism"] == "ppermute_halo"
+    assert comm["total_bytes"] == pytest.approx(2 * 4096.0)
+    (un,) = joined["unattributed"]
+    assert un["n_dispatches"] == 1
 
 
 def test_trace_dropped_surfaces_in_summary():
